@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing: the GPT-3-xl case-study campaign (paper §4)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
+                        global_plan, local_plan)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+
+
+def save_artifact(name: str, payload: Dict):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def gpt3xl_campaign(chip_name: str = "rtx3080ti", seed: int = 0,
+                    n_reps: int = 5, batch: Optional[int] = None,
+                    tp: int = 1, sp: bool = False):
+    """The paper's measurement campaign: GPT-3-xl, seq 1024, batch 40."""
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    kernels = build_workload(cfg, shape, tp=tp, sp=sp,
+                             batch_override=batch)
+    chip = get_chip(chip_name)
+    camp = Campaign(chip, seed=seed, n_reps=n_reps)
+    table = camp.run(kernels)
+    return camp, table
+
+
+def fmt_pct(x: float) -> str:
+    return f"{x:+.2f}%"

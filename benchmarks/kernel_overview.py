@@ -1,0 +1,36 @@
+"""Paper Fig. 5: absolute time & energy per kernel, auto vs min/max over
+all clock configurations."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import gpt3xl_campaign, save_artifact
+
+
+def main(verbose: bool = True):
+    camp, table = gpt3xl_campaign()
+    rows = []
+    for i, k in enumerate(table.kernels):
+        rows.append({
+            "kernel": f"#{i} {k.name}", "kind": k.kind,
+            "invocations": k.invocations,
+            "auto_time_s": float(table.time[i, table.auto_idx]),
+            "auto_energy_j": float(table.energy[i, table.auto_idx]),
+            "min_time_s": float(table.time[i].min()),
+            "max_time_s": float(table.time[i].max()),
+            "min_energy_j": float(table.energy[i].min()),
+            "max_energy_j": float(table.energy[i].max()),
+        })
+    out = {"kernels": rows, "n_kernels": len(rows)}
+    if verbose:
+        spread_t = max(r["max_time_s"] / r["min_time_s"] for r in rows)
+        spread_e = max(r["max_energy_j"] / r["min_energy_j"] for r in rows)
+        print(f"[kernel_overview] {len(rows)} kernels; max time spread "
+              f"{spread_t:.1f}x, max energy spread {spread_e:.1f}x "
+              f"across clock configs")
+    save_artifact("kernel_overview", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

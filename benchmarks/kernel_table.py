@@ -1,0 +1,29 @@
+"""Paper Table 1: optimal clocks + time/energy delta per kernel under
+globally-aggregated strict waste."""
+from __future__ import annotations
+
+from repro.core import WastePolicy, global_plan
+from .common import gpt3xl_campaign, save_artifact
+
+
+def main(verbose: bool = True):
+    camp, table = gpt3xl_campaign()
+    plan = global_plan(table, WastePolicy(0.0))
+    rows = plan.per_kernel()
+    out = {"rows": rows, "totals": plan.summary()}
+    if verbose:
+        print(f"[kernel_table] {len(rows)} kernels, global strict waste: "
+              f"t={plan.summary()['time_pct']}% "
+              f"e={plan.summary()['energy_pct']}%")
+        hdr = f"{'kernel':28s} {'mem':>7s} {'core':>7s} {'time%':>8s} {'energy%':>9s}"
+        print(hdr)
+        for r in rows:
+            print(f"{r['kernel'][:28]:28s} {str(r['mem']):>7s} "
+                  f"{str(r['core']):>7s} {r['time_pct']:+8.2f} "
+                  f"{r['energy_pct']:+9.2f}")
+    save_artifact("kernel_table", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts (trip-corrected HLO analysis).
+
+  compute_s    = flops_per_device / peak_flops
+  memory_s     = hbm_bytes_per_device / hbm_bw
+  collective_s = collective_bytes_per_device / ici_bw
+
+plus MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the useful-
+compute ratio MODEL_FLOPS / HLO_FLOPS.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config, get_shape
+from repro.hw import tpu
+from .common import save_artifact
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    total, active = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyze(rec):
+    n_dev = rec["n_devices"]
+    ha = rec["hlo_analysis"]
+    flops_dev = ha["flops_per_device"]
+    hbm_dev = ha["hbm_bytes_per_device"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    terms = {
+        "compute_s": flops_dev / tpu.PEAK_FLOPS_BF16,
+        "memory_s": hbm_dev / tpu.HBM_BW,
+        "collective_s": coll_dev / tpu.ICI_BW_PER_LINK,
+    }
+    # companion memory estimate from the analytic workload model (the HLO
+    # figure is an upper bound: CPU-backend fusion materializes elementwise
+    # chains a TPU compilation would fuse)
+    try:
+        from repro.core import build_workload, workload_totals
+        ks = build_workload(get_config(rec["arch"]),
+                            get_shape(rec["shape"]), tp=16, dp=16)
+        _, h_model, _ = workload_totals(ks)
+        mem_model = (h_model * (256.0 / n_dev)) / tpu.HBM_BW
+    except Exception:
+        mem_model = 0.0
+    dominant = max(terms, key=terms.get)
+    bound_time = max(terms.values())
+    terms["memory_model_s"] = mem_model
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf / n_dev
+    useful_ratio = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful-model-compute time over the bound
+    roofline_frac = (mf_dev / tpu.PEAK_FLOPS_BF16) / bound_time \
+        if bound_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind"), "gib_per_device": rec.get("gib_per_device"),
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+    }
+
+
+def main(verbose: bool = True):
+    rows = []
+    for rec in load_records():
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "mesh": rec["mesh"], "status": "skipped"})
+            else:
+                rows.append({"arch": rec.get("arch"),
+                             "shape": rec.get("shape"),
+                             "mesh": rec.get("mesh"), "status": "error"})
+            continue
+        r = analyze(rec)
+        r["status"] = "ok"
+        rows.append(r)
+        if verbose:
+            print(f"[roofline] {r['arch']:24s} {r['shape']:12s} "
+                  f"{r['mesh']:7s} C={r['compute_s']:9.2e}s "
+                  f"M={r['memory_s']:9.2e}s X={r['collective_s']:9.2e}s "
+                  f"dom={r['dominant'][:4]:4s} "
+                  f"useful={r['useful_flops_ratio']:5.2f} "
+                  f"roofline={r['roofline_fraction']:5.2f}")
+    save_artifact("roofline", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the benchmark's headline
+metric, typically the energy saving in percent).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (pass_level, kernel_overview, kernel_table, totals,
+               relaxed_waste, validation, data_parallel, tensor_parallel,
+               heterogeneity, switch_latency, dvfs_by_arch, roofline,
+               search_cost)
+
+
+def _derived(name, out):
+    try:
+        if name == "pass_level":
+            return out["strict_totals"]["energy_pct"]
+        if name == "kernel_overview":
+            return out["n_kernels"]
+        if name == "kernel_table":
+            return out["totals"]["energy_pct"]
+        if name == "totals":
+            return next(r["energy_pct"] for r in out["rows"]
+                        if r["plan"] == "kernel-global")
+        if name == "relaxed_waste":
+            return out["rows"][0]["global_energy_pct"]
+        if name == "validation":
+            return out["realized_energy_pct_mean"]
+        if name == "data_parallel":
+            return out["energy_spread_pp"]
+        if name == "tensor_parallel":
+            return out["energy_spread_pp"]
+        if name == "heterogeneity":
+            return out["a4000"]["waste"]["energy_pct"]
+        if name == "switch_latency":
+            return out["rows"][1]["coalesced_energy_pct"]  # 1us IVR point
+        if name == "dvfs_by_arch":
+            import numpy as np
+            return float(np.mean([r["energy_pct"] for r in out["rows"]]))
+        if name == "search_cost":
+            return out["rows"][1]["cost_frac"]
+        if name == "roofline":
+            ok = [r for r in out["rows"] if r.get("status") == "ok"]
+            return len(ok)
+    except Exception:
+        return ""
+    return ""
+
+
+BENCHES = [
+    ("pass_level", pass_level.main),            # Fig 3-4, §5
+    ("kernel_overview", kernel_overview.main),  # Fig 5
+    ("kernel_table", kernel_table.main),        # Table 1
+    ("totals", totals.main),                    # Table 2
+    ("relaxed_waste", relaxed_waste.main),      # Fig 6
+    ("validation", validation.main),            # Fig 7 (validation)
+    ("data_parallel", data_parallel.main),      # Fig 7 / §7
+    ("tensor_parallel", tensor_parallel.main),  # Fig 8 / §8
+    ("heterogeneity", heterogeneity.main),      # §9
+    ("switch_latency", switch_latency.main),    # §9, beyond-paper
+    ("dvfs_by_arch", dvfs_by_arch.main),        # beyond-paper, 10 archs
+    ("search_cost", search_cost.main),          # beyond-paper, §4 search
+    ("roofline", roofline.main),                # §Roofline
+]
+
+
+def main() -> None:
+    rows = []
+    for name, fn in BENCHES:
+        t0 = time.perf_counter()
+        try:
+            out = fn(verbose=True)
+            err = None
+        except Exception as e:  # keep the suite running
+            out, err = None, repr(e)
+        dt = (time.perf_counter() - t0) * 1e6
+        derived = _derived(name, out) if out is not None else f"ERR:{err}"
+        rows.append((name, dt, derived))
+        print(f"--- {name}: {dt/1e6:.2f}s ---\n", flush=True)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Fig. 8 / §8: tensor (+sequence) parallelism — apply the TP=1
+discovered clocks to TP in {1,2,4,8,16} shards (communication excluded,
+as in the paper's Megatron-style llm.c extension)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import WastePolicy, global_plan
+from .common import gpt3xl_campaign, save_artifact
+
+DEGREES = (1, 2, 4, 8, 16)
+
+
+def main(verbose: bool = True):
+    camp0, table0 = gpt3xl_campaign(tp=1, sp=True)
+    plan = global_plan(table0, WastePolicy(0.0))
+    rows = []
+    for d in DEGREES:
+        camp, table = gpt3xl_campaign(tp=d, sp=True, seed=200 + d)
+        t, e = table.totals(plan.choice)
+        tb, eb = table.baseline_totals()
+        rows.append({"tp": d,
+                     "time_pct": 100 * (t / tb - 1),
+                     "energy_pct": 100 * (e / eb - 1),
+                     "abs_time_s": t, "abs_energy_j": e})
+        if verbose:
+            r = rows[-1]
+            print(f"[tensor_parallel] tp={d:2d}: t={r['time_pct']:+6.2f}% "
+                  f"e={r['energy_pct']:+7.2f}%")
+    spread_t = max(r["time_pct"] for r in rows) - \
+        min(r["time_pct"] for r in rows)
+    spread_e = max(r["energy_pct"] for r in rows) - \
+        min(r["energy_pct"] for r in rows)
+    out = {"rows": rows, "time_spread_pp": spread_t,
+           "energy_spread_pp": spread_e}
+    if verbose:
+        print(f"[tensor_parallel] transfer spread: {spread_t:.2f} pp time, "
+              f"{spread_e:.2f} pp energy (paper: <=2 pp / <=6 pp)")
+    save_artifact("tensor_parallel", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 2: time/energy totals for {coarse, fine} x {local, global}
+x {waste, EDP}."""
+from __future__ import annotations
+
+from repro.core import (WastePolicy, edp_global_plan, edp_local_plan,
+                        edp_pass_plan, global_plan, local_plan,
+                        pass_level_plan)
+from .common import gpt3xl_campaign, save_artifact
+
+PAPER = {  # the paper's Table 2, for side-by-side reporting
+    "pass-local": (-0.20, -1.98), "pass-global": (-0.10, -2.07),
+    "kernel-local": (-1.78, -11.54), "kernel-global": (+0.00, -15.64),
+    "edp-local": (+10.03, -27.34), "edp-global": (+10.28, -27.52),
+    "edp-pass": (+10.21, -25.42),
+}
+
+
+def main(verbose: bool = True):
+    camp, table = gpt3xl_campaign()
+    plans = [
+        pass_level_plan(table, WastePolicy(0.0), aggregation="local"),
+        pass_level_plan(table, WastePolicy(0.0), aggregation="global"),
+        local_plan(table, WastePolicy(0.0)),
+        global_plan(table, WastePolicy(0.0)),
+        edp_pass_plan(table),
+        edp_local_plan(table),
+        edp_global_plan(table),
+    ]
+    rows = []
+    for p in plans:
+        s = p.summary()
+        ref = PAPER.get(s["plan"])
+        s["paper_time_pct"], s["paper_energy_pct"] = \
+            (ref if ref else (None, None))
+        rows.append(s)
+        if verbose:
+            ps = f" (paper {ref[0]:+.2f}/{ref[1]:+.2f})" if ref else ""
+            print(f"[totals] {s['plan']:14s} t={s['time_pct']:+7.2f}% "
+                  f"e={s['energy_pct']:+7.2f}%{ps}")
+    save_artifact("totals", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the whole pipeline in one page.
+
+1. Decompose a GPT-3-xl training iteration into kernels (paper Table 1).
+2. Run the simulated DVFS measurement campaign (paper §4).
+3. Plan: strict-waste kernel-level global optimum vs pass-level vs EDP.
+4. Compile the plan into a deployable DVFS schedule.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config, get_shape
+from repro.core import (Campaign, WastePolicy, build_workload,
+                        edp_global_plan, get_chip, global_plan,
+                        pass_level_plan, schedule_from_plan)
+
+
+def main():
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    kernels = build_workload(cfg, shape)
+    print(f"workload: {len(kernels)} kernels / iteration "
+          f"({sum(k.invocations for k in kernels)} launches)")
+
+    chip = get_chip("rtx3080ti")
+    camp = Campaign(chip, seed=0, n_reps=5)
+    table = camp.run(kernels)
+    tb, eb = table.baseline_totals()
+    print(f"auto baseline: {tb*1e3:.0f} ms/iter, {eb:.0f} J/iter")
+
+    for plan in (pass_level_plan(table, WastePolicy(0.0)),
+                 global_plan(table, WastePolicy(0.0)),
+                 edp_global_plan(table)):
+        s = plan.summary()
+        print(f"  {s['plan']:14s} time {s['time_pct']:+7.2f}%  "
+              f"energy {s['energy_pct']:+7.2f}%")
+
+    plan = global_plan(table, WastePolicy(0.0))
+    sched = schedule_from_plan(plan)
+    print(f"schedule: {len(sched.entries)} coalesced entries, "
+          f"{sched.n_switches} clock switches per iteration")
+    sched.save("artifacts/quickstart_schedule.json")
+    print("saved artifacts/quickstart_schedule.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Elastic resharding: restore a checkpoint onto a different mesh.
+
+The checkpoint stores logical (global) arrays; `reshard_restore` places
+them with the sharding rules of the *new* mesh — the core of elastic
+scaling (grow/shrink the data axis between jobs, recover from partial-pod
+loss by restarting on the surviving slice).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .checkpoint import CheckpointManager
+
+
+def reshard_restore(manager: CheckpointManager, template, mesh: Mesh,
+                    spec_tree, step: Optional[int] = None):
+    """Restore ``template``-shaped state, placing each leaf with its
+    PartitionSpec from ``spec_tree`` on ``mesh``."""
+    shardings = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return manager.restore(template, step=step, shardings=shardings)

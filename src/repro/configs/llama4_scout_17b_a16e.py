@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e — MoE 16e top-1, early fusion, iRoPE chunked
+attention [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+Scout uses chunked local attention (8192 window) on 3 of every 4 layers with
+a global-attention layer every 4th (iRoPE) — this makes it long-context
+capable (sub-quadratic in all but the sparse global layers), so the
+``long_500k`` shape runs for this arch.
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,
+    activation="swiglu",
+    norm="rms",
+    positional="rope",
+    rope_theta=500000.0,
+    attn_window=8192,
+    global_attn_every=4,
+    moe=MoEConfig(n_experts=16, top_k=1, capacity_factor=1.25,
+                  shared_expert=True),
+    source="[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]",
+)

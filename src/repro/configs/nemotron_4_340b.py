@@ -1,0 +1,19 @@
+"""nemotron-4-340b — GQA, squared-ReLU MLP [arXiv:2402.16819; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    head_dim=192,
+    activation="relu2",      # squared ReLU, non-gated MLP (2 matrices)
+    norm="layer",            # nemotron uses LayerNorm
+    positional="rope",
+    rope_theta=10000.0,
+    source="[arXiv:2402.16819; unverified]",
+)

@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, PipelineState, SyntheticCorpus
+
+__all__ = ["DataPipeline", "PipelineState", "SyntheticCorpus"]

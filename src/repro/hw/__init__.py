@@ -1,0 +1,7 @@
+from .tpu import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK, HBM_BYTES, \
+    roofline_terms
+from .hlo_parse import collective_bytes, analyze_hlo, HloAnalysis
+
+__all__ = ["PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW_PER_LINK", "HBM_BYTES",
+           "roofline_terms", "collective_bytes", "analyze_hlo",
+           "HloAnalysis"]

@@ -1,0 +1,19 @@
+"""TPU v5e hardware constants for roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW_PER_LINK = 50e9        # B/s per link
+HBM_BYTES = 16 * 1024 ** 3    # 16 GiB per chip
+
+
+def roofline_terms(flops: float, bytes_hbm: float, bytes_ici: float,
+                   n_chips: int):
+    """The three §Roofline terms, in seconds (aggregate work / aggregate
+    capability).  ``flops``/``bytes`` are per-device values from the
+    compiled module times n_chips, or global values; pass per-device values
+    with n_chips=1."""
+    return {
+        "compute_s": flops / (n_chips * PEAK_FLOPS_BF16),
+        "memory_s": bytes_hbm / (n_chips * HBM_BW),
+        "collective_s": bytes_ici / (n_chips * ICI_BW_PER_LINK),
+    }

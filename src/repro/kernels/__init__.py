@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a triple: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp
+oracle).  Validated in interpret mode on CPU; models select them with
+``use_pallas``-style flags on real TPU (the jnp refs are the defaults
+here).
+
+- flash_attention/  fwd + bwd (custom_vjp), GQA, causal/local windows
+- ssd_scan/         Mamba2 SSD chunked scan with VMEM-resident state
+- rmsnorm/          fused row-tiled RMSNorm
+"""
+from . import flash_attention, rmsnorm, ssd_scan
+
+__all__ = ["flash_attention", "rmsnorm", "ssd_scan"]

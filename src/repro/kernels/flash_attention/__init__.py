@@ -1,0 +1,7 @@
+from .ops import flash_attention, flash_attention_train
+from .ref import attention_ref
+from .kernel import flash_attention_fwd
+from .backward import flash_attention_bwd
+
+__all__ = ["flash_attention", "flash_attention_train", "attention_ref",
+           "flash_attention_fwd", "flash_attention_bwd"]

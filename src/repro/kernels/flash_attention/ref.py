@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, group: int = 1):
+    """q: (BH, Sq, D); k, v: (BKV, Sk, D), BH == BKV*group. fp32 softmax."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= qp >= kp
+    if window > 0:
+        valid &= (qp - kp) < window
+    s = jnp.where(valid[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None], p, 0.0)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

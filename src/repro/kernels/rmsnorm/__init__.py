@@ -1,0 +1,5 @@
+from .ops import rmsnorm
+from .ref import rmsnorm_ref
+from .kernel import rmsnorm_rows
+
+__all__ = ["rmsnorm", "rmsnorm_ref", "rmsnorm_rows"]

@@ -1,0 +1,30 @@
+"""Jit-able wrapper: arbitrary leading dims, padding to row blocks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_rows
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (..., d); w: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= int(s)
+    xf = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    o = rmsnorm_rows(xf, w, eps=eps, block_rows=br, interpret=interpret)
+    if pad:
+        o = o[:rows]
+    return o.reshape(shape)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the rmsnorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,5 @@
+from .ops import ssd
+from .ref import ssd_ref
+from .kernel import ssd_scan
+
+__all__ = ["ssd", "ssd_ref", "ssd_scan"]

@@ -1,0 +1,35 @@
+"""Jit-able wrapper: group->head broadcast, chunk padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, a, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,S,H,P); a: (B,S,H); Bm, Cm: (B,S,G,N) with H % G == 0.
+
+    Pads S to the chunk size and broadcasts the B/C groups to heads (the
+    kernel is head-mapped).  Returns (y, h_final) like the ref.
+    """
+    B, S, H, P = x.shape
+    G = Bm.shape[2]
+    rep = H // G
+    if rep > 1:
+        Bm = jnp.repeat(Bm, rep, axis=2)
+        Cm = jnp.repeat(Cm, rep, axis=2)
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h_final = ssd_scan(x, a, Bm, Cm, chunk=c, interpret=interpret)
+    if pad:
+        y = y[:, :S]
+    return y, h_final

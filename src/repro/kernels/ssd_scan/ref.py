@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: the sequential SSD recurrence (token by token)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, a, Bm, Cm):
+    """Naive recurrence.  x: (B,S,H,P); a: (B,S,H); Bm/Cm: (B,S,H,N).
+
+    h_t = exp(a_t) h_{t-1} + B_t x_t^T ;  y_t = C_t h_t.
+    Returns (y: (B,S,H,P), h_final: (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, at, bt, ct = inp     # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = jnp.exp(at)[..., None, None] * h \
+            + jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Cm.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h_final, ys = lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final

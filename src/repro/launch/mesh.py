@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  Single pod: 16x16 = 256 chips
+(data, model); multi-pod: 2x16x16 = 512 chips with a leading ``pod`` axis
+(DCN-connected in deployment) that joins the FSDP/data sharding — the same
+rules scale to any pod count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over host devices for tests/examples."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

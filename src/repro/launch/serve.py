@@ -1,0 +1,64 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Builds the engine, serves a synthetic request batch, and reports the
+per-phase DVFS plans (prefill vs decode) for the full-size arch.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_shape, smoke_config
+from ..core import (Campaign, WastePolicy, build_workload, get_chip,
+                    global_plan)
+from ..models import build_model
+from ..serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--chip", default="tpu-v5e")
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch)) if args.smoke \
+        else get_config(args.arch)
+    if cfg.family == "encdec":
+        raise SystemExit("serve launcher targets decoder LMs; use the "
+                         "ServeEngine API directly for enc-dec")
+    model = build_model(cfg, block_k=64)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=args.slots,
+                         max_seq=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 16))),
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    out = engine.generate(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in out)
+    print(f"[serve] {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s on this host)")
+
+    chip = get_chip(args.chip)
+    for sname in ("prefill_32k", "decode_32k"):
+        kernels = build_workload(get_config(args.arch), get_shape(sname),
+                                 tp=16, dp=16)
+        table = Campaign(chip, seed=1, n_reps=5).run(kernels)
+        plan = global_plan(table, WastePolicy(0.0))
+        print(f"[serve] {sname} DVFS plan: {plan.energy_pct:+.2f}% energy "
+              f"at {plan.time_pct:+.2f}% time")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Production entry point: builds the model from the registry, discovers (or
+loads) the DVFS schedule, and drives the fault-tolerant trainer.  On this
+CPU container the full configs are not executable — ``--smoke`` runs the
+reduced config end-to-end; the full config path is exactly what a TPU
+deployment would run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from ..configs import get_config, get_shape, smoke_config, smoke_shape
+from ..core import (Campaign, WastePolicy, build_workload, get_chip,
+                    global_plan, schedule_from_plan)
+from ..ckpt import CheckpointManager
+from ..data import DataPipeline
+from ..models import build_model
+from ..runtime import EnergyMeter
+from ..train import OptimizerConfig, make_train_step
+from ..train.loop import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--chip", default="tpu-v5e")
+    ap.add_argument("--dvfs", choices=("off", "strict", "relaxed"),
+                    default="strict")
+    ap.add_argument("--tau", type=float, default=0.01)
+    ap.add_argument("--schedule-out", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        shape = smoke_shape(shape)
+    print(f"[train] {cfg.name} x {shape.name} "
+          f"({cfg.param_count()[0]/1e6:.1f}M params)")
+
+    # --- DVFS plan for this workload ---
+    meter = None
+    if args.dvfs != "off":
+        kernels = build_workload(get_config(args.arch),
+                                 get_shape(args.shape))
+        chip = get_chip(args.chip)
+        table = Campaign(chip, seed=0, n_reps=5).run(kernels)
+        tau = 0.0 if args.dvfs == "strict" else args.tau
+        plan = global_plan(table, WastePolicy(tau))
+        sched = schedule_from_plan(plan)
+        print(f"[train] DVFS plan ({args.dvfs}): "
+              f"{plan.energy_pct:+.2f}% energy, {plan.time_pct:+.2f}% time")
+        if args.schedule_out:
+            sched.save(args.schedule_out)
+            print(f"[train] schedule -> {args.schedule_out}")
+        meter = EnergyMeter(chip, kernels, schedule=sched)
+
+    model = build_model(cfg, block_k=64)
+    step = make_train_step(
+        model, OptimizerConfig(lr=args.lr, decay_steps=args.steps),
+        accum_steps=args.accum, remat=True,
+        compress=args.compress_grads)
+    pipeline = DataPipeline(vocab_size=cfg.vocab_size,
+                            batch_per_host=shape.global_batch,
+                            seq_len=shape.seq_len)
+    ckpt_dir = args.ckpt_dir or f"artifacts/train_{cfg.name}"
+    trainer = Trainer(model, step, pipeline,
+                      CheckpointManager(ckpt_dir, keep=3),
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_every=args.ckpt_every),
+                      energy_meter=meter)
+    out = trainer.run()
+    print(f"[train] done: {json.dumps(out, default=float)}")
+
+
+if __name__ == "__main__":
+    main()

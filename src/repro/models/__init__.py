@@ -1,0 +1,24 @@
+"""Model registry: config -> model instance."""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from .transformer import DecoderLM
+from .ssm import MambaLM
+from .hybrid import HybridLM
+from .encdec import EncDecLM
+
+
+def build_model(cfg: ModelConfig, block_k: int = 1024):
+    """Instantiate the model implementation for a config."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, block_k=block_k)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, block_k=block_k)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, block_k=block_k)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = ["build_model", "DecoderLM", "MambaLM", "HybridLM", "EncDecLM"]

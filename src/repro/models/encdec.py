@@ -1,0 +1,253 @@
+"""Encoder–decoder transformer (seamless-m4t backbone).
+
+The speech/text frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, F, d).  Encoder: bidirectional self-attn;
+decoder: causal self-attn + cross-attn to the encoder memory.  Decode keeps
+a self-attn KV cache plus precomputed cross-attn K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import common as cm
+from .common import ParamBuilder, Params
+from .transformer import _stack_tree
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, block_k: int = 1024):
+        self.cfg = cfg
+        self.block_k = block_k
+        self.head_dim = cfg.resolved_head_dim
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # -- params -----------------------------------------------------------
+    def _enc_layer(self, b: ParamBuilder) -> Params:
+        cfg = self.cfg
+        return {
+            "norm_attn": cm.init_norm(b, cfg.d_model, cfg.norm),
+            "attn": cm.init_attention(b, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, self.head_dim),
+            "norm_mlp": cm.init_norm(b, cfg.d_model, cfg.norm),
+            "mlp": cm.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.activation),
+        }
+
+    def _dec_layer(self, b: ParamBuilder) -> Params:
+        p = self._enc_layer(b)
+        cfg = self.cfg
+        p["norm_cross"] = cm.init_norm(b, cfg.d_model, cfg.norm)
+        p["cross"] = cm.init_attention(b, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, self.head_dim)
+        return p
+
+    def _build(self, mode, rng=None):
+        cfg = self.cfg
+        b = ParamBuilder(mode, rng, dtype=self.param_dtype)
+        params = {
+            "embed": cm.init_embedding(b, cfg.vocab_size, cfg.d_model,
+                                       cfg.tie_embeddings,
+                                       max_seq=cfg.max_train_seq,
+                                       learned_pos=True),
+            "enc_pos": b.param((cfg.encoder_frontend_len, cfg.d_model),
+                               (None, "embed"), scale=0.02),
+            "enc_final_norm": cm.init_norm(b, cfg.d_model, cfg.norm),
+            "final_norm": cm.init_norm(b, cfg.d_model, cfg.norm),
+        }
+        if mode == ParamBuilder.INIT:
+            enc = [self._enc_layer(b) for _ in range(cfg.n_encoder_layers)]
+            dec = [self._dec_layer(b) for _ in range(cfg.n_layers)]
+            params["enc_layers"] = jax.tree.map(lambda *x: jnp.stack(x), *enc)
+            params["dec_layers"] = jax.tree.map(lambda *x: jnp.stack(x), *dec)
+        else:
+            params["enc_layers"] = _stack_tree(self._enc_layer(b),
+                                               cfg.n_encoder_layers, mode)
+            params["dec_layers"] = _stack_tree(self._dec_layer(b),
+                                               cfg.n_layers, mode)
+        return params
+
+    def init(self, rng):
+        return self._build(ParamBuilder.INIT, rng)
+
+    def abstract_params(self):
+        return self._build(ParamBuilder.ABSTRACT)
+
+    def param_axes(self):
+        return self._build(ParamBuilder.AXES)
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params, frames, remat: bool = True):
+        """frames: (B, F, d) stubbed frontend embeddings."""
+        cfg = self.cfg
+        F = frames.shape[1]
+        x = frames.astype(self.compute_dtype) \
+            + params["enc_pos"][:F].astype(self.compute_dtype)
+
+        def body(x, lp):
+            h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+            h = cm.attention_block(lp["attn"], h, cfg_theta=0.0,
+                                   positional="learned", causal=False,
+                                   block_k=self.block_k)
+            x = x + h
+            h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            x = x + cm.apply_mlp(lp["mlp"], h, cfg.activation)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return cm.apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+    # -- decoder ------------------------------------------------------------
+    def _dec_body(self, lp, x, memory, q_offset=0):
+        cfg = self.cfg
+        h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+        h = cm.attention_block(lp["attn"], h, cfg_theta=0.0,
+                               positional="learned", causal=True,
+                               q_offset=q_offset, block_k=self.block_k)
+        x = x + h
+        h = cm.apply_norm(lp["norm_cross"], x, cfg.norm)
+        h = cm.attention_block(lp["cross"], h, cfg_theta=0.0,
+                               positional="learned", causal=False,
+                               kv_x=memory, block_k=self.block_k)
+        x = x + h
+        h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+        return x + cm.apply_mlp(lp["mlp"], h, cfg.activation)
+
+    def loss(self, params, batch, rng=None, remat: bool = True):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"], remat=remat)
+        x = cm.embed_tokens(params["embed"], batch["tokens"],
+                            self.compute_dtype)
+
+        def body(x, lp):
+            return self._dec_body(lp, x, memory), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = lax.scan(body, x, params["dec_layers"])
+        x = cm.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = cm.unembed(params["embed"], x)
+        loss = cm.softmax_cross_entropy(logits, batch["targets"],
+                                        batch.get("mask"), z_loss=1e-4)
+        return loss, {"loss": loss, "ce_loss": loss}
+
+    # -- serving ------------------------------------------------------------
+    def _cache_struct(self, B, max_seq):
+        cfg = self.cfg
+        KV, D = cfg.n_kv_heads, self.head_dim
+        L = cfg.n_layers
+        F = cfg.encoder_frontend_len
+        dt = self.compute_dtype
+
+        def sds(shape):
+            return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+        return {"k": sds((L, B, max_seq, KV, D)),
+                "v": sds((L, B, max_seq, KV, D)),
+                "cross_k": sds((L, B, F, KV, D)),
+                "cross_v": sds((L, B, F, KV, D))}
+
+    def init_cache(self, B, max_seq):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self._cache_struct(B, max_seq))
+
+    def prefill(self, params, tokens, frames=None, max_seq=None,
+                remat: bool = True):
+        """Encode frames, run decoder over prompt tokens, build caches."""
+        cfg = self.cfg
+        memory = self.encode(params, frames, remat=remat)
+        x = cm.embed_tokens(params["embed"], tokens, self.compute_dtype)
+        B, S = x.shape[0], x.shape[1]
+        max_seq = max_seq or S
+
+        def body(x, lp):
+            h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+            h, (k, v) = cm.attention_block(
+                lp["attn"], h, cfg_theta=0.0, positional="learned",
+                causal=True, block_k=self.block_k, return_kv=True)
+            x = x + h
+            h = cm.apply_norm(lp["norm_cross"], x, cfg.norm)
+            h, (ck, cv) = cm.attention_block(
+                lp["cross"], h, cfg_theta=0.0, positional="learned",
+                causal=False, kv_x=memory, block_k=self.block_k,
+                return_kv=True)
+            x = x + h
+            h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            x = x + cm.apply_mlp(lp["mlp"], h, cfg.activation)
+            kpad = jnp.zeros((B, max_seq) + k.shape[2:], k.dtype)
+            cache = {"k": lax.dynamic_update_slice(kpad, k, (0, 0, 0, 0)),
+                     "v": lax.dynamic_update_slice(jnp.zeros_like(kpad), v,
+                                                   (0, 0, 0, 0)),
+                     "cross_k": ck, "cross_v": cv}
+            return x, cache
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, cache = lax.scan(body, x, params["dec_layers"])
+        x = cm.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = cm.unembed(params["embed"], x)
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = (jnp.take(params["embed"]["wte"], tokens[:, None], axis=0)
+             + jnp.take(params["embed"]["wpe"], pos[:, None], axis=0)
+             ).astype(self.compute_dtype)
+        ar = jnp.arange(B)
+
+        def body(x, inp):
+            lp, c = inp
+            h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+            q = jnp.einsum("bsd,dhk->bshk", h,
+                           cm.cast(lp["attn"]["wq"], h.dtype))
+            k = jnp.einsum("bsd,dhk->bshk", h,
+                           cm.cast(lp["attn"]["wk"], h.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h,
+                           cm.cast(lp["attn"]["wv"], h.dtype))
+            kc = c["k"].at[ar, pos].set(k[:, 0])
+            vc = c["v"].at[ar, pos].set(v[:, 0])
+            o = cm.decode_attention(q, kc, vc, pos=pos)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               cm.cast(lp["attn"]["wo"], h.dtype))
+            h = cm.apply_norm(lp["norm_cross"], x, cfg.norm)
+            q = jnp.einsum("bsd,dhk->bshk", h,
+                           cm.cast(lp["cross"]["wq"], h.dtype))
+            F = c["cross_k"].shape[1]
+            o = cm.decode_attention(q, c["cross_k"], c["cross_v"],
+                                    pos=jnp.full((B,), F - 1, jnp.int32))
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               cm.cast(lp["cross"]["wo"], h.dtype))
+            h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            x = x + cm.apply_mlp(lp["mlp"], h, cfg.activation)
+            return x, {"k": kc, "v": vc, "cross_k": c["cross_k"],
+                       "cross_v": c["cross_v"]}
+
+        x, new_cache = lax.scan(body, x, (params["dec_layers"], cache))
+        x = cm.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = cm.unembed(params["embed"], x)
+        return logits[:, 0], new_cache
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        F = cfg.encoder_frontend_len
+        i32 = jnp.int32
+
+        def sds(shp, dt=i32):
+            return jax.ShapeDtypeStruct(tuple(shp), dt)
+
+        frames = sds((B, F, cfg.d_model), self.compute_dtype)
+        if shape.kind == "train":
+            return {"tokens": sds((B, S)), "targets": sds((B, S)),
+                    "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": sds((B, S)), "frames": frames}
+        return {"tokens": sds((B,)), "pos": sds((B,)),
+                "cache": self._cache_struct(B, S)}

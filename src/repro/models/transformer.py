@@ -1,0 +1,442 @@
+"""Decoder-only transformer LM (dense, MoE, VLM) with scan-over-layers.
+
+One implementation covers seven of the assigned archs:
+  dense : llama3.2-1b/3b, yi-34b, nemotron-4-340b (relu^2/layernorm), gpt3-xl
+  moe   : granite-moe-1b-a400m (32e top-8), llama4-scout (16e top-1 + shared
+          expert + chunked local attention with a global layer every 4th)
+  vlm   : internvl2-1b (stub patch embeddings prefixed to the sequence)
+
+Layers are stacked (leading ``layers`` dim) and executed with ``lax.scan``;
+for window/global alternation the scan runs over *groups* of
+``global_attn_every`` layers so local layers keep ring-buffer KV caches
+(sub-quadratic long-context decode) while every 4th layer stays global.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import common as cm
+from .common import ParamBuilder, Params
+
+
+import os
+
+# Sequence-parallel residual carry: measured *harmful* under XLA SPMD
+# propagation (per-einsum seq re-gathers; see EXPERIMENTS.md §Perf A-2,
+# refuted hypothesis) — off by default, kept for re-evaluation on TPU.
+_SP_RESIDUAL = os.environ.get("REPRO_SP_RESIDUAL", "0") == "1"
+
+
+def _stack_tree(tree, n: int, mode: str):
+    """Add a leading layer dim of size n to every leaf (per builder mode)."""
+    if mode == ParamBuilder.AXES:
+        return jax.tree.map(lambda axes: ("layers",) + axes, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+class DecoderLM:
+    """Functional decoder LM implementing the repro Model API."""
+
+    def __init__(self, cfg: ModelConfig, block_k: int = 1024):
+        self.cfg = cfg
+        self.block_k = block_k
+        self.head_dim = cfg.resolved_head_dim
+        # layer grouping for local/global attention alternation
+        if cfg.attn_window and cfg.global_attn_every:
+            self.group = cfg.global_attn_every
+            assert cfg.n_layers % self.group == 0, cfg.name
+        else:
+            self.group = 1
+        self.n_groups = cfg.n_layers // self.group
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # -- layer flags ----------------------------------------------------
+    def _layer_window(self, idx_in_group: int) -> int:
+        """Static attention window for a layer (0 = full/global)."""
+        cfg = self.cfg
+        if not cfg.attn_window:
+            return 0
+        is_global = (idx_in_group == self.group - 1)
+        return 0 if is_global else cfg.attn_window
+
+    # -- params ----------------------------------------------------------
+    def _init_layer(self, b: ParamBuilder) -> Params:
+        cfg = self.cfg
+        p: Params = {
+            "norm_attn": cm.init_norm(b, cfg.d_model, cfg.norm),
+            "attn": cm.init_attention(b, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, self.head_dim),
+            "norm_mlp": cm.init_norm(b, cfg.d_model, cfg.norm),
+        }
+        if cfg.is_moe:
+            p["moe"] = cm.init_moe(b, cfg.d_model, cfg.d_ff,
+                                   cfg.moe.n_experts, cfg.activation,
+                                   cfg.moe.shared_expert)
+        else:
+            p["mlp"] = cm.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.activation)
+        return p
+
+    def _build(self, mode: str, rng=None) -> Params:
+        cfg = self.cfg
+        b = ParamBuilder(mode, rng, dtype=self.param_dtype)
+        params: Params = {
+            "embed": cm.init_embedding(
+                b, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings,
+                max_seq=cfg.max_train_seq,
+                learned_pos=(cfg.positional == "learned")),
+            "final_norm": cm.init_norm(b, cfg.d_model, cfg.norm),
+        }
+        if mode == ParamBuilder.INIT:
+            layers = [self._init_layer(b) for _ in range(cfg.n_layers)]
+            params["layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *layers)
+        else:
+            one = self._init_layer(b)
+            params["layers"] = _stack_tree(one, cfg.n_layers, mode)
+        return params
+
+    def init(self, rng) -> Params:
+        return self._build(ParamBuilder.INIT, rng)
+
+    def abstract_params(self) -> Params:
+        return self._build(ParamBuilder.ABSTRACT)
+
+    def param_axes(self) -> Params:
+        return self._build(ParamBuilder.AXES)
+
+    # -- forward ----------------------------------------------------------
+    def _layer_fwd(self, lp: Params, x, idx_in_group: int, q_offset: int,
+                   aux_acc: Dict):
+        cfg = self.cfg
+        window = self._layer_window(idx_in_group)
+        h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+        h = cm.attention_block(
+            lp["attn"], h, cfg_theta=cfg.rope_theta,
+            positional=cfg.positional, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap, q_offset=q_offset,
+            block_k=self.block_k)
+        x = x + h
+        h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+        if cfg.is_moe:
+            h, aux = cm.apply_moe(
+                lp["moe"], h, n_experts=cfg.moe.n_experts,
+                top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor,
+                activation=cfg.activation,
+                shared_expert=cfg.moe.shared_expert)
+            for k, v in aux.items():
+                aux_acc[k] = aux_acc.get(k, 0.0) + v
+        else:
+            h = cm.apply_mlp(lp["mlp"], h, cfg.activation)
+        return x + h, aux_acc
+
+    def forward_hidden(self, params: Params, x: jnp.ndarray,
+                       q_offset: int = 0, remat: bool = True
+                       ) -> Tuple[jnp.ndarray, Dict]:
+        """Run the layer stack on embedded input x: (B, S, d)."""
+        cfg = self.cfg
+        glayers = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.group) + a.shape[1:]),
+            params["layers"])
+
+        def group_body(x, gp):
+            aux: Dict[str, Any] = {}
+            for i in range(self.group):
+                lp = jax.tree.map(lambda a, i=i: a[i], gp)
+                x, aux = self._layer_fwd(lp, x, i, q_offset, aux)
+            if _SP_RESIDUAL:
+                # sequence-parallel residual stream: the scan carry (and
+                # the per-layer saved residuals under remat) shard over
+                # the model axis; attention re-gathers seq (Megatron-SP).
+                x = cm.shard_hint(x, "batch", "model", None)
+            aux_vec = jnp.stack(
+                [jnp.asarray(aux.get(k, 0.0), jnp.float32)
+                 for k in ("load_balance", "router_z", "dropped_frac")])
+            return x, aux_vec
+
+        body = group_body
+        if remat:
+            body = jax.checkpoint(group_body,
+                                  prevent_cse=False)
+        x, aux_stack = lax.scan(body, x, glayers)
+        aux = {}
+        if cfg.is_moe:
+            s = aux_stack.sum(axis=0)
+            aux = {"load_balance": s[0] / cfg.n_layers,
+                   "router_z": s[1] / cfg.n_layers,
+                   "dropped_frac": s[2] / cfg.n_layers}
+        return x, aux
+
+    def _embed_input(self, params, tokens, patch_embeds=None, pos_offset=0):
+        x = cm.embed_tokens(params["embed"], tokens, self.compute_dtype,
+                            pos_offset=pos_offset)
+        if patch_embeds is not None:
+            x = jnp.concatenate(
+                [patch_embeds.astype(self.compute_dtype), x], axis=1)
+        return x
+
+    def logits(self, params, x):
+        x = cm.apply_norm(params["final_norm"], x, self.cfg.norm)
+        return cm.unembed(params["embed"], x)
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray],
+             rng=None, remat: bool = True):
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        patch = batch.get("patch_embeds")
+        x = self._embed_input(params, tokens, patch)
+        x, aux = self.forward_hidden(params, x, remat=remat)
+        if patch is not None:
+            x = x[:, patch.shape[1]:]          # loss only over text positions
+        logits = self.logits(params, x)
+        mask = batch.get("mask")
+        loss = cm.softmax_cross_entropy(logits, targets, mask, z_loss=1e-4)
+        metrics = {"ce_loss": loss}
+        if cfg.is_moe:
+            loss = (loss + cfg.moe.aux_loss_weight * aux["load_balance"]
+                    + cfg.moe.router_z_loss_weight * aux["router_z"])
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving ----------------------------------------------------------
+    def _cache_struct(self, B: int, max_seq: int):
+        """Abstract KV-cache tree (grouped; ring buffers for local layers)."""
+        cfg = self.cfg
+        KV, D = cfg.n_kv_heads, self.head_dim
+        dt = self.compute_dtype
+
+        def sds(shape):
+            return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+        cache = {}
+        if self.group == 1:
+            cache["k"] = sds((self.n_groups, B, max_seq, KV, D))
+            cache["v"] = sds((self.n_groups, B, max_seq, KV, D))
+        else:
+            W = min(cfg.attn_window, max_seq)
+            cache["k_local"] = sds((self.n_groups, self.group - 1, B, W, KV, D))
+            cache["v_local"] = sds((self.n_groups, self.group - 1, B, W, KV, D))
+            cache["k_global"] = sds((self.n_groups, B, max_seq, KV, D))
+            cache["v_global"] = sds((self.n_groups, B, max_seq, KV, D))
+        return cache
+
+    def init_cache(self, B: int, max_seq: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self._cache_struct(B, max_seq))
+
+    def prefill(self, params: Params, tokens: jnp.ndarray,
+                patch_embeds=None, max_seq: Optional[int] = None,
+                remat: bool = True):
+        """Process a prompt; return (last-position logits, filled cache)."""
+        cfg = self.cfg
+        x = self._embed_input(params, tokens, patch_embeds)
+        B, S = x.shape[0], x.shape[1]
+        max_seq = max_seq or S
+        cache = self.init_cache(B, max_seq)
+        glayers = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.group) + a.shape[1:]),
+            params["layers"])
+
+        def group_body(x, gp):
+            new_cache = {}
+            for i in range(self.group):
+                lp = jax.tree.map(lambda a, i=i: a[i], gp)
+                window = self._layer_window(i)
+                h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+                h, (k, v) = cm.attention_block(
+                    lp["attn"], h, cfg_theta=cfg.rope_theta,
+                    positional=cfg.positional, causal=True, window=window,
+                    softcap=cfg.attn_logit_softcap, block_k=self.block_k,
+                    return_kv=True)
+                x = x + h
+                h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+                if cfg.is_moe:
+                    h, _ = cm.apply_moe(
+                        lp["moe"], h, n_experts=cfg.moe.n_experts,
+                        top_k=cfg.moe.top_k,
+                        capacity_factor=cfg.moe.capacity_factor,
+                        activation=cfg.activation,
+                        shared_expert=cfg.moe.shared_expert, drop=False)
+                else:
+                    h = cm.apply_mlp(lp["mlp"], h, cfg.activation)
+                x = x + h
+                if self.group == 1:
+                    kpad = jnp.zeros((B, max_seq) + k.shape[2:], k.dtype)
+                    new_cache["k"] = lax.dynamic_update_slice(
+                        kpad, k, (0, 0, 0, 0))
+                    new_cache["v"] = lax.dynamic_update_slice(
+                        jnp.zeros_like(kpad), v, (0, 0, 0, 0))
+                else:
+                    W = min(cfg.attn_window, max_seq)
+                    if window:  # local layer: keep last W, ring-indexed
+                        kw, vw = k[:, -W:], v[:, -W:]
+                        if S < W:
+                            kw = jnp.pad(kw, ((0, 0), (0, W - S),
+                                              (0, 0), (0, 0)))
+                            vw = jnp.pad(vw, ((0, 0), (0, W - S),
+                                              (0, 0), (0, 0)))
+                        else:
+                            # roll so that slot (p % W) holds position p
+                            shift = S % W
+                            kw = jnp.roll(kw, shift, axis=1)
+                            vw = jnp.roll(vw, shift, axis=1)
+                        new_cache.setdefault("k_local", []).append(kw)
+                        new_cache.setdefault("v_local", []).append(vw)
+                    else:
+                        kpad = jnp.zeros((B, max_seq) + k.shape[2:], k.dtype)
+                        new_cache["k_global"] = lax.dynamic_update_slice(
+                            kpad, k, (0, 0, 0, 0))
+                        new_cache["v_global"] = lax.dynamic_update_slice(
+                            jnp.zeros_like(kpad), v, (0, 0, 0, 0))
+            for key in ("k_local", "v_local"):
+                if key in new_cache:
+                    new_cache[key] = jnp.stack(new_cache[key])
+            return x, new_cache
+
+        if remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, cache = lax.scan(group_body, x, glayers)
+        logits = self.logits(params, x[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params: Params, cache, tokens: jnp.ndarray,
+                    pos: jnp.ndarray):
+        """One decode step. tokens: (B,) int32; pos: (B,) absolute position."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = cm.embed_tokens(params["embed"], tokens[:, None],
+                            self.compute_dtype,
+                            pos_offset=0) if cfg.positional != "learned" else \
+            (jnp.take(params["embed"]["wte"], tokens[:, None], axis=0)
+             + jnp.take(params["embed"]["wpe"], pos[:, None], axis=0)
+             ).astype(self.compute_dtype)
+        glayers = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.group) + a.shape[1:]),
+            params["layers"])
+        arangeB = jnp.arange(B)
+
+        def one_attn(lp, x, kc, vc, window, ring: bool):
+            h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
+            q = jnp.einsum("bsd,dhk->bshk", h, cm.cast(lp["attn"]["wq"],
+                                                       h.dtype))
+            k = jnp.einsum("bsd,dhk->bshk", h, cm.cast(lp["attn"]["wk"],
+                                                       h.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h, cm.cast(lp["attn"]["wv"],
+                                                       h.dtype))
+            if cfg.positional == "rope":
+                q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
+                k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
+            slot = pos % kc.shape[1] if ring else pos
+            kc = kc.at[arangeB, slot].set(k[:, 0])
+            vc = vc.at[arangeB, slot].set(v[:, 0])
+            if ring:
+                W = kc.shape[1]
+                s = jnp.arange(W)[None, :]
+                abs_pos = pos[:, None] - ((pos[:, None] - s) % W)
+                o = self._ring_attention(q, kc, vc, abs_pos, pos)
+            else:
+                o = cm.decode_attention(q, kc, vc, pos=pos,
+                                        window=window)
+            o = jnp.einsum("bshk,hkd->bsd", o, cm.cast(lp["attn"]["wo"],
+                                                       h.dtype))
+            x = x + o
+            h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            if cfg.is_moe:
+                h, _ = cm.apply_moe(
+                    lp["moe"], h, n_experts=cfg.moe.n_experts,
+                    top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor,
+                    activation=cfg.activation,
+                    shared_expert=cfg.moe.shared_expert, drop=False)
+            else:
+                h = cm.apply_mlp(lp["mlp"], h, cfg.activation)
+            return x + h, kc, vc
+
+        def group_body(x, scanned):
+            gp, gcache = scanned
+            new_cache = dict(gcache)
+            if self.group == 1:
+                lp = jax.tree.map(lambda a: a[0], gp)
+                x, kc, vc = one_attn(lp, x, gcache["k"], gcache["v"],
+                                     0, ring=False)
+                new_cache["k"], new_cache["v"] = kc, vc
+            else:
+                kls, vls = [], []
+                for i in range(self.group):
+                    lp = jax.tree.map(lambda a, i=i: a[i], gp)
+                    window = self._layer_window(i)
+                    if window:
+                        x, kc, vc = one_attn(lp, x, gcache["k_local"][i],
+                                             gcache["v_local"][i], window,
+                                             ring=True)
+                        kls.append(kc)
+                        vls.append(vc)
+                    else:
+                        x, kc, vc = one_attn(lp, x, gcache["k_global"],
+                                             gcache["v_global"], 0,
+                                             ring=False)
+                        new_cache["k_global"] = kc
+                        new_cache["v_global"] = vc
+                new_cache["k_local"] = jnp.stack(kls)
+                new_cache["v_local"] = jnp.stack(vls)
+            return x, new_cache
+
+        x, new_cache = lax.scan(group_body, x, (glayers, cache))
+        logits = self.logits(params, x)
+        return logits[:, 0], new_cache
+
+    def _ring_attention(self, q, kc, vc, abs_pos, pos):
+        """Attention over a ring-buffer cache with per-slot abs positions."""
+        B, _, H, D = q.shape
+        KV = kc.shape[2]
+        G = H // KV
+        qr = q.reshape(B, KV, G, D) * (D ** -0.5)
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, kc,
+                       preferred_element_type=jnp.float32)
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+        s = jnp.where(valid[:, None, None, :], s, cm.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+        return o.reshape(B, 1, H, D).astype(q.dtype)
+
+    # -- specs -------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every entry-point input."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def sds(shp, dt=i32):
+            return jax.ShapeDtypeStruct(tuple(shp), dt)
+
+        if shape.kind == "train":
+            specs = {"tokens": sds((B, S)), "targets": sds((B, S))}
+            if cfg.family == "vlm":
+                P = cfg.vision_prefix_len
+                specs["tokens"] = sds((B, S - P))
+                specs["targets"] = sds((B, S - P))
+                specs["patch_embeds"] = sds((B, P, cfg.d_model),
+                                            self.compute_dtype)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": sds((B, S))}
+            if cfg.family == "vlm":
+                P = cfg.vision_prefix_len
+                specs["tokens"] = sds((B, S - P))
+                specs["patch_embeds"] = sds((B, P, cfg.d_model),
+                                            self.compute_dtype)
+            return specs
+        # decode: one new token against a cache of size S
+        return {"tokens": sds((B,)), "pos": sds((B,)),
+                "cache": self._cache_struct(B, S)}

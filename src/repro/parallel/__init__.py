@@ -1,0 +1,10 @@
+from .sharding import (param_specs, param_shardings, batch_specs,
+                       cache_specs, input_shardings, state_shardings,
+                       spec_for_axes, data_axes, LOGICAL_RULES)
+from .collectives import moe_all_to_all, moe_all_to_all_sharded
+
+__all__ = [
+    "param_specs", "param_shardings", "batch_specs", "cache_specs",
+    "input_shardings", "state_shardings", "spec_for_axes", "data_axes",
+    "LOGICAL_RULES", "moe_all_to_all", "moe_all_to_all_sharded",
+]

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, Request, sample_token
+
+__all__ = ["ServeEngine", "Request", "sample_token"]

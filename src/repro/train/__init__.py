@@ -1,0 +1,13 @@
+from .optimizer import OptimizerConfig, init_opt_state, adamw_update, \
+    lr_at, global_norm, clip_by_global_norm
+from .grad import compress_grads, decompress_grads, accumulate, \
+    zeros_like_f32
+from .step import TrainState, init_train_state, make_train_step, \
+    make_eval_step
+
+__all__ = [
+    "OptimizerConfig", "init_opt_state", "adamw_update", "lr_at",
+    "global_norm", "clip_by_global_norm", "compress_grads",
+    "decompress_grads", "accumulate", "zeros_like_f32", "TrainState",
+    "init_train_state", "make_train_step", "make_eval_step",
+]

@@ -1,0 +1,62 @@
+"""Gradient utilities: accumulation, compression (distributed-opt tricks).
+
+``compress_grads``/``decompress_grads`` implement bf16 gradient compression
+with stochastic rounding + error feedback — halves DP all-reduce bytes at
+scale.  On the production mesh the all-reduce happens over the ``data`` (and
+``pod``) axes; compressing before the reduce is the standard
+bandwidth-bound optimization.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _stochastic_round_bf16(x: jnp.ndarray, rng) -> jnp.ndarray:
+    """fp32 -> bf16 with stochastic rounding (unbiased)."""
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    noise = jax.random.randint(rng, x.shape, 0, 1 << 16,
+                               dtype=jnp.uint32)
+    rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32) \
+        .astype(jnp.bfloat16)
+
+
+def compress_grads(grads, rng, error_buf=None):
+    """Compress fp32 grads to bf16 with error feedback.
+
+    Returns (compressed, new_error_buf).  error_buf carries the residual
+    (g - decompress(compress(g))) into the next step so the quantization is
+    unbiased over time even without stochastic rounding.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if error_buf is None:
+        ebuf = [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+    else:
+        ebuf = jax.tree.leaves(error_buf)
+    keys = jax.random.split(rng, len(leaves))
+    comp, new_err = [], []
+    for g, e, k in zip(leaves, ebuf, keys):
+        corrected = g.astype(jnp.float32) + e
+        c = _stochastic_round_bf16(corrected, k)
+        comp.append(c)
+        new_err.append(corrected - c.astype(jnp.float32))
+    return (jax.tree.unflatten(treedef, comp),
+            jax.tree.unflatten(treedef, new_err))
+
+
+def decompress_grads(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def accumulate(acc, grads, scale: float = 1.0):
+    """acc += grads * scale (fp32 accumulator)."""
+    return jax.tree.map(
+        lambda a, g: a + g.astype(jnp.float32) * scale, acc, grads)
+
+
+def zeros_like_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

@@ -1,0 +1,25 @@
+"""Shared test fixtures.
+
+NOTE: no global XLA_FLAGS here — smoke tests and benches must see the real
+single CPU device; multi-device sharding tests spawn subprocesses with
+their own --xla_force_host_platform_device_count (see test_sharding.py,
+test_elastic.py).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,122 @@
+"""Planner properties (seed-swept in lieu of hypothesis):
+
+* strict-waste feasibility (time never exceeds budget),
+* global >= local >= pass-level energy savings (paper's ordering),
+* Lagrangian+refill vs exact DP vs brute force agreement,
+* monotonicity of savings in the relaxed threshold tau.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Campaign, KernelSpec, WastePolicy, build_workload,
+                        edp_global_plan, edp_local_plan, get_chip,
+                        global_plan, global_plan_dp, local_plan,
+                        pass_level_plan)
+from repro.core.measure import MeasurementTable
+from repro.core.freq import AUTO, ClockPair
+from repro.configs import get_config, get_shape
+
+
+def small_table(rng, n_kernels=6, n_pairs=8):
+    """Random synthetic measurement table with an auto column that is
+    time-minimal-ish (auto = near-best time, high energy)."""
+    time = rng.uniform(1.0, 2.0, (n_kernels, n_pairs))
+    energy = rng.uniform(5.0, 10.0, (n_kernels, n_pairs))
+    auto = n_pairs - 1
+    time[:, auto] = time.min(axis=1) * rng.uniform(1.0, 1.05, n_kernels)
+    energy[:, auto] = energy.max(axis=1)
+    pairs = [ClockPair(float(i), float(i)) for i in range(n_pairs - 1)] \
+        + [ClockPair(AUTO, AUTO)]
+    kernels = [KernelSpec(name=f"k{i}", kind="gemm", flops=1e9,
+                          hbm_bytes=1e6,
+                          invocations=int(rng.integers(1, 5)),
+                          phase="fwd" if i % 2 else "bwd")
+               for i in range(n_kernels)]
+    return MeasurementTable(chip_name="synth", kernels=kernels,
+                            pairs=pairs, time=time, energy=energy,
+                            auto_idx=auto)
+
+
+def brute_force(table, tau=0.0):
+    """Exact optimum by enumeration (small instances only)."""
+    import itertools
+    t_base, _ = table.baseline_totals()
+    budget = (1 + tau) * t_base
+    n, C = table.time.shape
+    best = (np.inf, None)
+    for combo in itertools.product(range(C), repeat=n):
+        choice = np.array(combo)
+        t, e = table.totals(choice)
+        if t <= budget * (1 + 1e-12) and e < best[0]:
+            best = (e, choice)
+    return best
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_global_beats_local_beats_pass(seed):
+    rng = np.random.default_rng(seed)
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    table = Campaign(chip, seed=seed, n_reps=3).run(kernels)
+    pol = WastePolicy(0.0)
+    g = global_plan(table, pol)
+    l = local_plan(table, pol)
+    p = pass_level_plan(table, pol, aggregation="global")
+    assert g.energy_j <= l.energy_j * (1 + 1e-9)
+    assert l.energy_j <= p.energy_j * (1 + 1e-9)
+    # strict feasibility
+    assert g.time_s <= g.base_time_s * (1 + 1e-9)
+    assert p.time_s <= p.base_time_s * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_global_matches_brute_force(seed):
+    rng = np.random.default_rng(100 + seed)
+    table = small_table(rng, n_kernels=4, n_pairs=5)
+    e_bf, _ = brute_force(table, tau=0.02)
+    g = global_plan(table, WastePolicy(0.02))
+    dp = global_plan_dp(table, WastePolicy(0.02), n_bins=4000)
+    # Lagrangian+refill within 2% of exact; DP within discretization error
+    assert g.energy_j <= e_bf * 1.02 + 1e-9
+    assert dp.energy_j <= e_bf * 1.02 + 1e-9
+    assert g.energy_j >= e_bf * (1 - 1e-9)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_tau_monotonicity(seed):
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    table = Campaign(chip, seed=seed, n_reps=3).run(kernels)
+    prev = np.inf
+    for tau in (0.0, 0.01, 0.05, 0.2):
+        g = global_plan(table, WastePolicy(tau))
+        assert g.energy_j <= prev * (1 + 1e-9), f"tau={tau} not monotone"
+        assert g.time_s <= (1 + tau) * g.base_time_s * (1 + 1e-9)
+        prev = g.energy_j
+
+
+def test_edp_plans_do_not_beat_energy_only():
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    table = Campaign(chip, seed=0, n_reps=3).run(kernels)
+    e_only = global_plan(table, WastePolicy(1e9))
+    edp_g = edp_global_plan(table)
+    edp_l = edp_local_plan(table)
+    assert edp_g.energy_j >= e_only.energy_j * (1 - 1e-9)
+    # global EDP score <= local EDP score
+    assert edp_g.time_s * edp_g.energy_j <= \
+        edp_l.time_s * edp_l.energy_j * (1 + 1e-9)
+
+
+def test_auto_plan_is_noop():
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    table = Campaign(chip, seed=0, n_reps=3).run(kernels)
+    base = np.full(len(table.kernels), table.auto_idx)
+    t, e = table.totals(base)
+    tb, eb = table.baseline_totals()
+    assert t == tb and e == eb

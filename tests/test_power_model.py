@@ -1,0 +1,69 @@
+"""Power/perf model invariants (the mechanistic claims the paper's
+empirics rest on)."""
+import numpy as np
+import pytest
+
+from repro.core import ClockPair, KernelSpec, get_chip
+from repro.core.freq import AUTO
+
+
+CHIP = get_chip("rtx3080ti")
+
+GEMM = KernelSpec(name="gemm", kind="gemm", flops=1e12, hbm_bytes=1e9)
+ELEM = KernelSpec(name="gelu", kind="gelu", flops=1e9, hbm_bytes=1e9)
+
+
+def test_time_monotone_in_core_clock_for_compute_bound():
+    cores = CHIP.grid.core_clocks_mhz
+    times = [CHIP.evaluate(GEMM, ClockPair(AUTO, c))[0] for c in cores]
+    assert all(t1 >= t2 - 1e-12 for t1, t2 in zip(times, times[1:]))
+
+
+def test_memory_bound_kernel_insensitive_to_core_clock():
+    t_hi = CHIP.evaluate(ELEM, ClockPair(AUTO, 2100.0))[0]
+    t_lo = CHIP.evaluate(ELEM, ClockPair(AUTO, 630.0))[0]
+    assert t_lo < t_hi * 1.05   # <5% slowdown from 3.3x core reduction
+
+
+def test_memory_bound_kernel_saves_energy_at_low_core():
+    _, e_hi = CHIP.evaluate(ELEM, ClockPair(AUTO, AUTO))
+    _, e_lo = CHIP.evaluate(ELEM, ClockPair(AUTO, 630.0))
+    assert e_lo < 0.8 * e_hi    # >20% saving (paper: ~30%)
+
+
+def test_compute_bound_kernel_saves_energy_at_low_mem():
+    _, e_hi = CHIP.evaluate(GEMM, ClockPair(AUTO, AUTO))
+    t_hi, _ = CHIP.evaluate(GEMM, ClockPair(AUTO, AUTO))
+    t_lo, e_lo = CHIP.evaluate(GEMM, ClockPair(5001.0, AUTO))
+    assert e_lo < 0.95 * e_hi
+    assert t_lo <= t_hi * (1 + 1e-9)  # throttle relief: not slower
+
+
+def test_throttle_relief_signature():
+    """The paper's Table-1 signature: compute-bound GEMMs get *faster*
+    when the memory clock drops (power-cap relief)."""
+    t_auto, _ = CHIP.evaluate(GEMM, ClockPair(AUTO, AUTO))
+    t_low, _ = CHIP.evaluate(GEMM, ClockPair(5001.0, AUTO))
+    assert t_low < t_auto
+
+
+def test_voltage_curve_monotone_and_bounded():
+    fs = np.linspace(0.05, 1.0, 50)
+    vs = [CHIP.voltage(f) for f in fs]
+    assert all(v2 >= v1 - 1e-12 for v1, v2 in zip(vs, vs[1:]))
+    assert vs[-1] == pytest.approx(1.0)
+    assert vs[0] >= 0.3
+
+
+def test_energy_positive_and_finite_on_grid():
+    for pair in CHIP.grid.pairs():
+        for k in (GEMM, ELEM):
+            t, e = CHIP.evaluate(k, pair)
+            assert np.isfinite(t) and np.isfinite(e)
+            assert t > 0 and e > 0
+
+
+def test_power_cap_respected():
+    for pair in (ClockPair(AUTO, AUTO), ClockPair(9501.0, 2100.0)):
+        t, e = CHIP.evaluate(GEMM, pair)
+        assert e / t <= CHIP.p_cap * 1.05   # small fixed-point tolerance

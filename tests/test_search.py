@@ -1,0 +1,50 @@
+"""Measurement-efficient frequency search: quality vs exhaustive."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
+                        global_plan)
+from repro.core.search import (evaluate_against_truth, search_plan,
+                               _candidate_mask)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    return chip, kernels
+
+
+def test_pruning_keeps_auto_and_prunes_something(setup):
+    chip, kernels = setup
+    pairs = chip.grid.pairs()
+    mask = _candidate_mask(chip, kernels, pairs)
+    auto = pairs.index(next(p for p in pairs if p.is_auto))
+    assert mask[:, auto].all()
+    assert mask.sum() < mask.size          # something pruned
+    assert (mask.sum(axis=1) >= 2).all()   # every kernel has options
+
+
+def test_search_matches_exhaustive_quality(setup):
+    chip, kernels = setup
+    table = Campaign(chip, seed=0, n_reps=5).run(kernels)
+    exh = global_plan(table, WastePolicy(0.0))
+    t_e, e_e = evaluate_against_truth(chip, kernels, exh)
+    plan, rep = search_plan(chip, kernels, WastePolicy(0.0), rounds=3,
+                            seed=2)
+    t_s, e_s = evaluate_against_truth(chip, kernels, plan)
+    # within 1.5 pp of exhaustive at a fraction of the cost
+    assert e_s < e_e + 1.5
+    assert rep.cost_fraction < 0.6
+    # true time within the (noise-tolerant) waste budget
+    assert t_s < 0.5
+
+
+def test_search_cost_accounting(setup):
+    chip, kernels = setup
+    _, rep = search_plan(chip, kernels, rounds=2, seed=0)
+    assert rep.measurements > 0
+    assert rep.measurements <= rep.exhaustive_measurements
+    assert 0 < rep.cells_swept <= rep.cells_total

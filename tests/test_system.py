@@ -1,0 +1,114 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline the paper describes (§4-§6), on the simulator substrate:
+  workload decomposition -> exhaustive campaign -> waste-reduction plans ->
+  schedule -> runtime energy accounting -> validation re-measurement,
+and the paper's three headline orderings:
+  (1) kernel-level saves much more than pass-level at strict waste,
+  (2) global aggregation beats local,
+  (3) EDP saves more energy but costs significant time (waste does not).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core import (Campaign, WastePolicy, build_workload,
+                        edp_global_plan, get_chip, global_plan, local_plan,
+                        pass_level_plan, schedule_from_plan)
+from repro.runtime import EnergyMeter
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    chip = get_chip("rtx3080ti")
+    kernels = build_workload(get_config("gpt3-xl"),
+                             get_shape("paper_gpt3xl"))
+    camp = Campaign(chip, seed=0, n_reps=5)
+    return chip, kernels, camp, camp.run(kernels)
+
+
+def test_kernel_level_beats_pass_level(campaign):
+    _, _, _, table = campaign
+    pol = WastePolicy(0.0)
+    fine = global_plan(table, pol)
+    coarse = pass_level_plan(table, pol, aggregation="global")
+    assert fine.energy_pct < coarse.energy_pct - 5.0  # paper: -15.6 vs -2.1
+    assert fine.time_pct <= 1e-6
+    assert coarse.time_pct <= 1e-6
+
+
+def test_global_beats_local(campaign):
+    _, _, _, table = campaign
+    pol = WastePolicy(0.0)
+    g = global_plan(table, pol)
+    l = local_plan(table, pol)
+    assert g.energy_pct <= l.energy_pct + 1e-9
+
+
+def test_edp_trades_time_for_energy(campaign):
+    _, _, _, table = campaign
+    e = edp_global_plan(table)
+    w = global_plan(table, WastePolicy(0.0))
+    assert e.energy_pct < w.energy_pct      # EDP saves more energy...
+    assert e.time_pct > 5.0                 # ...at a big slowdown
+    assert w.time_pct <= 1e-6               # waste does not
+
+
+def test_headline_magnitudes(campaign):
+    """Reproduction targets from the paper's Table 2 (within bands)."""
+    _, _, _, table = campaign
+    fine = global_plan(table, WastePolicy(0.0))
+    coarse = pass_level_plan(table, WastePolicy(0.0), aggregation="global")
+    assert -20.0 < fine.energy_pct < -10.0     # paper: -15.64
+    assert -5.0 < coarse.energy_pct < -0.5     # paper: -2.07
+    loc = local_plan(table, WastePolicy(0.0))
+    assert -16.0 < loc.energy_pct < -7.0       # paper: -11.54
+
+
+def test_validation_selection_bias(campaign):
+    """Fig. 7: realized savings <= discovered savings under fresh noise."""
+    _, _, camp, table = campaign
+    plan = global_plan(table, WastePolicy(0.0))
+    des = []
+    for _ in range(10):
+        tp, ep, ta, ea = camp.remeasure(table, plan.choice)
+        des.append(100 * (ep / ea - 1))
+    realized = float(np.mean(des))
+    assert realized > plan.energy_pct - 1.0    # noise bounds
+    assert realized < -8.0                     # savings persist
+
+
+def test_schedule_to_meter_pipeline(campaign):
+    """Runtime accounting exposes the §9 switch-latency caveat: at the
+    ~100 ms nvidia-smi latency the per-kernel plan loses part of its
+    savings to switch overhead; at IVR-class (1 µs) latency the full
+    planner savings survive."""
+    import dataclasses
+    chip, kernels, _, table = campaign
+    plan = global_plan(table, WastePolicy(0.0))
+    sched = schedule_from_plan(plan)
+    auto = EnergyMeter(chip, kernels, schedule=None)
+    slow = EnergyMeter(chip, kernels, schedule=sched)
+    fast_chip = dataclasses.replace(chip, switch_latency_s=1e-6)
+    fast = EnergyMeter(fast_chip, kernels, schedule=sched)
+    r0 = auto.on_step(0)
+    r_slow = slow.on_step(0)
+    r_fast = fast.on_step(0)
+    save_slow = 100 * (r_slow.energy_j / r0.energy_j - 1)
+    save_fast = 100 * (r_fast.energy_j / r0.energy_j - 1)
+    assert save_fast < -10.0                 # IVR keeps the plan's value
+    assert save_slow > save_fast             # smi latency erodes it
+    assert r_slow.n_switches == r_fast.n_switches > 0
+
+
+def test_plan_transfers_across_batch(campaign):
+    """§7: the batch-40 plan applied at batch 8 keeps most of the saving."""
+    chip, _, _, table = campaign
+    plan = global_plan(table, WastePolicy(0.0))
+    kernels8 = build_workload(get_config("gpt3-xl"),
+                              get_shape("paper_gpt3xl"), batch_override=8)
+    table8 = Campaign(chip, seed=9, n_reps=5).run(kernels8)
+    t, e = table8.totals(plan.choice)
+    tb, eb = table8.baseline_totals()
+    assert 100 * (e / eb - 1) < -8.0
+    assert 100 * (t / tb - 1) < 1.0

@@ -1,0 +1,80 @@
+"""Workload decomposition checks: FLOP totals vs 6ND, family coverage,
+TP/DP scaling, decode boundedness."""
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config, get_shape
+from repro.core import build_workload, workload_totals
+
+
+def test_gpt3xl_flops_match_6nd():
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    kernels = build_workload(cfg, shape)
+    f, h, i = workload_totals(kernels)
+    total, _ = cfg.param_count()
+    expected = 6.0 * total * shape.tokens
+    assert 0.8 * expected < f < 1.6 * expected  # + attention flops
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_all_archs_decompose(arch):
+    cfg = get_config(arch)
+    for sname in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = get_shape(sname)
+        kernels = build_workload(cfg, shape)
+        assert len(kernels) > 3, (arch, sname)
+        f, h, i = workload_totals(kernels)
+        assert f > 0 and h > 0
+        if sname == "train_4k":
+            _, active = cfg.param_count()
+            expected = 6.0 * active * shape.tokens
+            assert f > 0.5 * expected, (arch, f / expected)
+
+
+def test_decode_workload_is_memory_bound():
+    """One-token decode streams weights + KV cache: AI << ridge point."""
+    cfg = get_config("llama3.2-1b")
+    kernels = build_workload(cfg, get_shape("decode_32k"))
+    f, h, _ = workload_totals(kernels)
+    assert f / h < 20  # flops/byte far below any matmul ridge
+
+
+def test_tp_shards_work():
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    f1, h1, _ = workload_totals(build_workload(cfg, shape, tp=1, sp=True))
+    f8, h8, _ = workload_totals(build_workload(cfg, shape, tp=8, sp=True))
+    assert f8 < f1 / 4  # per-shard work shrinks (not exactly /8: embeds)
+
+
+def test_dp_scales_batch():
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    f1, _, _ = workload_totals(build_workload(cfg, shape, dp=1))
+    f4, _, _ = workload_totals(build_workload(cfg, shape, dp=4))
+    assert abs(f4 - f1 / 4) / (f1 / 4) < 0.1
+
+
+def test_comm_kernels_appear_with_tp():
+    cfg = get_config("gpt3-xl")
+    shape = get_shape("paper_gpt3xl")
+    ks = build_workload(cfg, shape, tp=8, include_comm=True)
+    assert any(k.kind == "allreduce" for k in ks)
+    assert sum(k.ici_bytes for k in ks) > 0
+
+
+def test_moe_workload_has_dispatch():
+    cfg = get_config("granite-moe-1b-a400m")
+    ks = build_workload(cfg, get_shape("train_4k"), tp=16,
+                        include_comm=True)
+    kinds = {k.kind for k in ks}
+    assert "dispatch" in kinds
+    assert "alltoall" in kinds
+
+
+def test_ssm_workload_has_scan():
+    cfg = get_config("mamba2-370m")
+    ks = build_workload(cfg, get_shape("train_4k"))
+    assert any(k.kind == "scan" for k in ks)
+    assert not any("qk" in k.name for k in ks)  # attention-free
