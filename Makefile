@@ -1,0 +1,19 @@
+# Test tiers.
+#
+# test-fast : the sub-60s tier — everything not marked @pytest.mark.slow
+#             (slow = subprocess multi-device tests, Pallas interpret-mode
+#             kernels, full train-loop / system integration runs).
+# test      : the full tier-1 suite (~5 min).
+
+PYTEST = PYTHONPATH=src python -m pytest -q
+
+.PHONY: test test-fast bench
+
+test:
+	$(PYTEST)
+
+test-fast:
+	$(PYTEST) -m "not slow"
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

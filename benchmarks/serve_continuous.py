@@ -1,0 +1,137 @@
+"""Continuous batching vs wave batching: throughput, tail latency, energy.
+
+Two claims, measured:
+
+1. **Scheduling** — on a skewed generation-length workload (a straggler in
+   every wave), the continuous engine keeps every slot busy while the wave
+   engine idles short requests behind the wave straggler.  Measured as
+   real wall-clock tokens/sec and per-request completion "latency" (decode
+   steps until a request finishes) on a CPU smoke model.
+2. **DVFS** — the engine replays an offline
+   :class:`~repro.core.phase_plan.PhasePlanBundle` (prefill + per-bucket
+   decode plans, planned for the full-size arch on the TPU-v5e-like chip)
+   through ``PhaseExecutor``, reporting executed energy vs the auto
+   governor at <= the policy's time budget, with per-phase switch counts.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_continuous
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ARCH = "llama3.2-1b"
+SLOTS = 4
+MAX_SEQ = 96
+TAU = 0.005
+N_REQUESTS = 16
+
+
+def _requests(vocab: int):
+    """Skewed mix: mostly short generations, a 6x straggler every 4th
+    request (the wave scheduler's worst case)."""
+    import jax  # noqa: F401  (repro.serve pulls jax; keep import local)
+    from repro.serve import Request
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(N_REQUESTS):
+        plen = 8 if i % 2 == 0 else 12
+        new = 48 if i % 4 == 1 else int(rng.integers(4, 10))
+        reqs.append(Request(uid=i,
+                            prompt=rng.integers(0, vocab, plen),
+                            max_new_tokens=new))
+    return reqs
+
+
+def _drive(eng, vocab) -> Dict:
+    """Warm-up pass (compiles), reset, then a timed steady-state pass."""
+    eng.generate(_requests(vocab))                    # warm-up
+    eng.reset()
+    reqs = _requests(vocab)
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in reqs)
+    lat = np.array([r.finished_step for r in reqs], dtype=float)
+    return {"wall_s": dt, "tokens": tokens,
+            "tokens_per_s": tokens / dt,
+            "decode_steps": eng.n_decode_steps,
+            "latency_steps_p50": float(np.percentile(lat, 50)),
+            "latency_steps_p95": float(np.percentile(lat, 95))}
+
+
+def main(verbose: bool = True) -> Dict:
+    import jax
+    from repro.configs import REGISTRY, smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import WastePolicy, get_chip, plan_phase_bundle
+    from repro.models import build_model
+    from repro.runtime import PhaseExecutor
+    from repro.serve import ServeEngine, WaveEngine
+    from .common import save_artifact
+
+    cfg = dataclasses.replace(smoke_config(REGISTRY[ARCH]),
+                              compute_dtype="float32")
+    model = build_model(cfg, block_k=16)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- 1. scheduling: wall-clock tokens/sec, skewed workload ----------
+    wave = _drive(WaveEngine(model, params, batch_slots=SLOTS,
+                             max_seq=MAX_SEQ), cfg.vocab_size)
+    cont = _drive(ServeEngine(model, params, batch_slots=SLOTS,
+                              max_seq=MAX_SEQ), cfg.vocab_size)
+    speedup = cont["tokens_per_s"] / wave["tokens_per_s"]
+
+    # --- 2. DVFS: plan the full-size arch, replay through the engine ----
+    full = REGISTRY[ARCH]
+    chip = get_chip("tpu-v5e")
+    pre = ShapeConfig(name="serve_prefill", seq_len=512, global_batch=1,
+                      kind="prefill")
+    dec = ShapeConfig(name="serve_decode", seq_len=512, global_batch=SLOTS,
+                      kind="decode")
+    bundle = plan_phase_bundle(full, chip, n_slots=SLOTS,
+                               prefill_shape=pre, decode_shape=dec,
+                               policy=WastePolicy(TAU), n_reps=10)
+    ex = PhaseExecutor(bundle, chip)
+    eng = ServeEngine(model, params, batch_slots=SLOTS, max_seq=MAX_SEQ,
+                      executor=ex)
+    eng.generate(_requests(cfg.vocab_size))
+    energy = eng.energy_summary()
+
+    out = {
+        "arch": ARCH, "slots": SLOTS, "n_requests": N_REQUESTS,
+        "wave": wave, "continuous": cont,
+        "throughput_speedup": speedup,
+        "tau": TAU,
+        "energy": energy,
+    }
+    save_artifact("serve_continuous", out)
+
+    if verbose:
+        print(f"skewed workload, {N_REQUESTS} requests, {SLOTS} slots:")
+        for tag, r in (("wave", wave), ("continuous", cont)):
+            print(f"  {tag:10s}: {r['tokens']} tok in {r['wall_s']:.2f}s"
+                  f" ({r['tokens_per_s']:.1f} tok/s,"
+                  f" {r['decode_steps']} decode steps,"
+                  f" p50/p95 latency {r['latency_steps_p50']:.0f}/"
+                  f"{r['latency_steps_p95']:.0f} steps)")
+        print(f"  speedup    : {speedup:.2f}x tokens/sec")
+        tot = energy["totals"]
+        print(f"DVFS replay ({full.name} on {chip.name}, tau={TAU}):")
+        for name, row in energy["phases"].items():
+            if row["steps"]:
+                print(f"  {name:10s} steps={row['steps']:3d} "
+                      f"switches={row['n_switches']:3d} "
+                      f"time {row['time_pct']:+7.4f}%  "
+                      f"energy {row['energy_pct']:+8.3f}%")
+        print(f"  total      time {tot['time_pct']:+7.4f}% "
+              f"(budget {100*TAU:+.2f}%)  energy {tot['energy_pct']:+8.3f}%"
+              f"  switches={tot['n_switches']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

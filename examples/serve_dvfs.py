@@ -1,8 +1,12 @@
-"""Serving example: batched generation + decode-phase DVFS planning.
+"""Serving example: continuous batching + executed phase-aware DVFS.
 
 Decode workloads are HBM-bound (weight + KV-cache streaming), so the
-strict-waste planner finds much deeper core-clock reductions than in
-training — the paper's §11 inference outlook, made concrete.
+waste planner finds much deeper core-clock reductions than in training —
+the paper's §11 inference outlook, made concrete.  Unlike the offline
+planning demos, the plan here is *executed*: the engine replays a
+``PhasePlanBundle`` (prefill plan + decode plans keyed by active-slot
+bucket) through ``FrequencyController``/``EnergyMeter`` hooks at every
+phase transition, and reports the realized energy account.
 
 Run:  PYTHONPATH=src python examples/serve_dvfs.py
 """
@@ -11,37 +15,56 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.configs import REGISTRY, get_shape, smoke_config
-from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
-                        global_plan)
+from repro.configs import REGISTRY, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import WastePolicy, get_chip, plan_phase_bundle
 from repro.models import build_model
+from repro.runtime import PhaseExecutor
 from repro.serve import Request, ServeEngine
+
+SLOTS = 4
 
 
 def main():
-    cfg = smoke_config(REGISTRY["llama3.2-1b"])
+    # --- offline: plan every serving phase of the full-size arch --------
+    full = REGISTRY["llama3.2-1b"]
+    chip = get_chip("tpu-v5e")
+    prefill = ShapeConfig(name="serve_prefill", seq_len=512,
+                          global_batch=1, kind="prefill")
+    decode = ShapeConfig(name="serve_decode", seq_len=512,
+                         global_batch=SLOTS, kind="decode")
+    bundle = plan_phase_bundle(full, chip, n_slots=SLOTS,
+                               prefill_shape=prefill, decode_shape=decode,
+                               policy=WastePolicy(0.005), n_reps=10)
+    bundle.save("artifacts/serve_phase_bundle.json")
+    print("planned phases:")
+    for name, row in bundle.summary()["phases"].items():
+        print(f"  {name:10s} time {row['time_pct']:+7.3f}%  "
+              f"energy {row['energy_pct']:+8.3f}%  "
+              f"switches/step {row['n_switches']}")
+
+    # --- online: continuous-batching engine executes the bundle ---------
+    cfg = dataclasses.replace(smoke_config(full), compute_dtype="float32")
     model = build_model(cfg, block_k=16)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, batch_slots=4, max_seq=96)
+    engine = ServeEngine(model, params, batch_slots=SLOTS, max_seq=96,
+                         executor=PhaseExecutor(bundle, chip))
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                rng.integers(4, 12)),
-                    max_new_tokens=8) for i in range(6)]
-    out = engine.generate(reqs)
-    for r in out[:3]:
-        print(f"req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
+                    max_new_tokens=int(rng.integers(4, 24)))
+            for i in range(10)]
+    engine.generate(reqs)
+    for r in reqs[:3]:
+        print(f"req {r.uid}: prompt[{len(r.prompt)}] -> "
+              f"{len(r.generated)} tokens, done at step {r.finished_step}")
 
-    # --- DVFS plans per serving phase (full-size arch) ---
-    full = REGISTRY["llama3.2-1b"]
-    chip = get_chip("tpu-v5e")
-    for sname in ("prefill_32k", "decode_32k"):
-        kernels = build_workload(full, get_shape(sname), tp=16, dp=16)
-        table = Campaign(chip, seed=1, n_reps=5).run(kernels)
-        plan = global_plan(table, WastePolicy(0.0))
-        print(f"{sname:12s}: {plan.energy_pct:+7.2f}% energy at "
-              f"{plan.time_pct:+.2f}% time (strict waste, "
-              f"{len(kernels)} kernels)")
+    tot = engine.energy_summary()["totals"]
+    print(f"executed: {tot['steps']} phase steps, "
+          f"{tot['n_switches']} clock switches, "
+          f"time {tot['time_pct']:+.4f}% vs auto, "
+          f"energy {tot['energy_pct']:+.3f}% vs auto")
 
 
 if __name__ == "__main__":

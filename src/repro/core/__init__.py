@@ -4,7 +4,8 @@ from .freq import AUTO, ClockPair, FrequencyGrid, paper_grid_3080ti, \
     tpu_v5e_grid
 from .power_model import Chip, KernelSpec, get_chip, rtx3080ti_like, \
     a4000_like, tpu_v5e_like, CHIPS
-from .workload import WorkloadBuilder, build_workload, workload_totals
+from .workload import (WorkloadBuilder, build_workload, workload_totals,
+                       decode_slot_buckets, decode_bucket_workloads)
 from .measure import Campaign, MeasurementTable, NoiseModel
 from .objectives import WastePolicy, edp, ed2p, compute_waste, pct
 from .planner import (Plan, local_plan, global_plan, global_plan_dp,
@@ -14,6 +15,7 @@ from .coalesce import CoalescedPlan, coalesced_global_plan, expand_sequence
 from .search import search_plan, SearchReport, evaluate_against_truth
 from .schedule import DVFSSchedule, ScheduleEntry, schedule_from_plan, \
     schedule_from_coalesced
+from .phase_plan import PhasePlan, PhasePlanBundle, plan_phase_bundle
 
 __all__ = [
     "AUTO", "ClockPair", "FrequencyGrid", "paper_grid_3080ti",
@@ -26,5 +28,7 @@ __all__ = [
     "CoalescedPlan", "coalesced_global_plan", "expand_sequence",
     "DVFSSchedule", "ScheduleEntry", "schedule_from_plan",
     "schedule_from_coalesced", "search_plan", "SearchReport",
-    "evaluate_against_truth",
+    "evaluate_against_truth", "decode_slot_buckets",
+    "decode_bucket_workloads", "PhasePlan", "PhasePlanBundle",
+    "plan_phase_bundle",
 ]

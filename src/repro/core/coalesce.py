@@ -92,7 +92,10 @@ class CoalescedPlan:
                 "n_instances": len(self.sequence),
                 "n_switches": self.n_switches,
                 "time_pct": round(self.time_pct, 3),
-                "energy_pct": round(self.energy_pct, 3)}
+                "energy_pct": round(self.energy_pct, 3),
+                "time_s": self.time_s, "energy_j": self.energy_j,
+                "base_time_s": self.base_time_s,
+                "base_energy_j": self.base_energy_j}
 
 
 def _dp_for_lambda(T: np.ndarray, E: np.ndarray, lam: float,

@@ -1,0 +1,195 @@
+"""Per-phase DVFS plan bundles for continuous-batching serving.
+
+A serving step is either a *prefill* (one admitted prompt) or a *decode*
+step over the currently active slots.  The two phases sit at opposite ends
+of the roofline — prefill is GEMM/compute-heavy, decode is HBM-bound
+weight/KV streaming (paper §10–11) — so they get separate clock plans.
+Decode additionally varies with how many slots are occupied, so the bundle
+keys decode plans by active-slot-count *bucket* (powers of two, see
+:func:`~repro.core.workload.decode_slot_buckets`).
+
+The bundle is the deployable artifact the planner emits offline and the
+:class:`~repro.serve.engine.ServeEngine` executes online through
+``FrequencyController`` / ``EnergyMeter`` hooks — the DSO-style fusion of
+offline models with online control.  JSON round-trip like
+:class:`~repro.core.schedule.DVFSSchedule`; each phase also carries its
+kernel list so replay accounting needs nothing but the bundle + a chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .coalesce import coalesced_global_plan
+from .measure import Campaign
+from .objectives import WastePolicy
+from .planner import Plan
+from .power_model import Chip, KernelSpec
+from .schedule import (DVFSSchedule, schedule_from_plan,
+                       schedule_from_coalesced)
+from .workload import WorkloadBuilder, decode_slot_buckets
+
+
+@dataclass
+class PhasePlan:
+    """One phase's deployable plan: schedule + the kernels it covers."""
+
+    name: str                      # "prefill" | "decode@<bucket>"
+    schedule: DVFSSchedule
+    kernels: List[KernelSpec]
+
+    @property
+    def energy_j(self) -> float:
+        return float(self.schedule.meta.get("energy_j", 0.0))
+
+    @property
+    def time_s(self) -> float:
+        return float(self.schedule.meta.get("time_s", 0.0))
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name,
+                "schedule": json.loads(self.schedule.to_json()),
+                "kernels": [dataclasses.asdict(k) for k in self.kernels]}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PhasePlan":
+        return cls(name=d["name"],
+                   schedule=DVFSSchedule.from_json(
+                       json.dumps(d["schedule"])),
+                   kernels=[KernelSpec(**k) for k in d["kernels"]])
+
+
+@dataclass
+class PhasePlanBundle:
+    """Prefill plan + decode plans keyed by active-slot-count bucket."""
+
+    chip_name: str
+    prefill: PhasePlan
+    decode: Dict[int, PhasePlan]          # bucket -> plan
+    meta: Dict = field(default_factory=dict)
+
+    @property
+    def buckets(self) -> List[int]:
+        return sorted(self.decode)
+
+    def decode_bucket(self, n_active: int) -> int:
+        """Smallest bucket >= n_active (largest bucket if none)."""
+        for b in self.buckets:
+            if b >= n_active:
+                return b
+        return self.buckets[-1]
+
+    def decode_for(self, n_active: int) -> PhasePlan:
+        return self.decode[self.decode_bucket(n_active)]
+
+    def phases(self) -> Dict[str, PhasePlan]:
+        out = {"prefill": self.prefill}
+        out.update({f"decode@{b}": self.decode[b] for b in self.buckets})
+        return out
+
+    # -- serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "chip": self.chip_name,
+            "meta": self.meta,
+            "prefill": self.prefill.to_dict(),
+            "decode": {str(b): p.to_dict() for b, p in self.decode.items()},
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PhasePlanBundle":
+        d = json.loads(s)
+        return cls(chip_name=d["chip"],
+                   prefill=PhasePlan.from_dict(d["prefill"]),
+                   decode={int(b): PhasePlan.from_dict(p)
+                           for b, p in d["decode"].items()},
+                   meta=d.get("meta", {}))
+
+    def save(self, path: str):
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "PhasePlanBundle":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def summary(self) -> Dict:
+        rows = {}
+        for name, p in self.phases().items():
+            m = p.schedule.meta
+            rows[name] = {
+                "time_pct": m.get("time_pct"),
+                "energy_pct": m.get("energy_pct"),
+                "n_switches": p.schedule.n_switches,
+                "n_kernels": len(p.kernels),
+            }
+        return {"chip": self.chip_name, "phases": rows, "meta": self.meta}
+
+
+def plan_phase_bundle(cfg: ModelConfig, chip: Chip, *,
+                      n_slots: int,
+                      prefill_shape: ShapeConfig,
+                      decode_shape: ShapeConfig,
+                      policy: WastePolicy = WastePolicy(),
+                      planner: Optional[Callable[..., Plan]] = None,
+                      seed: int = 0, n_reps: int = 5,
+                      tp: int = 1, dp: int = 1,
+                      meta: Optional[Dict] = None) -> PhasePlanBundle:
+    """Measure + plan every serving phase of (cfg, shapes) on ``chip``.
+
+    Runs one simulated measurement campaign per phase (prefill at the
+    prefill shape's batch, decode once per slot bucket with the bucket as
+    the batch) and compiles each plan into a coalesced schedule.
+
+    By default phases are planned with
+    :func:`~repro.core.coalesce.coalesced_global_plan`, which charges clock
+    switches against the time budget directly — decode steps are short
+    (ms), so even µs-scale switches are budget-relevant there.  Pass a
+    ``planner`` (e.g. :func:`~repro.core.planner.global_plan`) to use a
+    switch-oblivious kernel-level plan instead; its budget is then shrunk
+    by the realized switch overhead and re-planned so the *executed* phase
+    still meets the policy.
+    """
+    camp = Campaign(chip, seed=seed, n_reps=n_reps)
+
+    def plan_one(name: str, kernels: List[KernelSpec]) -> PhasePlan:
+        table = camp.run(kernels)
+        if planner is None:
+            cp = coalesced_global_plan(
+                table, policy, switch_latency_s=chip.switch_latency_s)
+            sched = schedule_from_coalesced(cp, meta={"phase": name})
+            return PhasePlan(name=name, schedule=sched, kernels=kernels)
+        plan = planner(table, policy)
+        sched = schedule_from_plan(plan, meta={"phase": name})
+        # switch-oblivious planner: shrink the budget by the realized
+        # switch overhead and re-plan (two rounds converge — switch counts
+        # only move when the plan does)
+        t_base, _ = table.baseline_totals()
+        for _ in range(2):
+            overhead = sched.n_switches * chip.switch_latency_s
+            eff_tau = policy.tau - overhead / t_base
+            plan = planner(table, WastePolicy(eff_tau))
+            sched = schedule_from_plan(plan, meta={"phase": name})
+        return PhasePlan(name=name, schedule=sched, kernels=kernels)
+
+    pre_kernels = WorkloadBuilder(cfg, prefill_shape, tp=tp, dp=dp).build()
+    prefill = plan_one("prefill", pre_kernels)
+    decode: Dict[int, PhasePlan] = {}
+    for b in decode_slot_buckets(n_slots):
+        kernels = WorkloadBuilder(cfg, decode_shape, tp=tp, dp=dp,
+                                  batch_override=b).build()
+        decode[b] = plan_one(f"decode@{b}", kernels)
+    md = dict(meta or {})
+    md.update({"model": cfg.name, "tau": policy.tau, "n_slots": n_slots,
+               "prefill_shape": prefill_shape.name,
+               "decode_shape": decode_shape.name})
+    return PhasePlanBundle(chip_name=chip.name, prefill=prefill,
+                           decode=decode, meta=md)

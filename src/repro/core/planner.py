@@ -106,7 +106,6 @@ def global_plan(table: MeasurementTable, policy: WastePolicy = WastePolicy(),
     slack refill."""
     t_base, _ = table.baseline_totals()
     budget = policy.budget(t_base)
-    w = table.weights[:, None]
 
     choice = _lagrangian_choice(table, 0.0)
     t_tot, _ = table.totals(choice)
@@ -135,17 +134,23 @@ def global_plan(table: MeasurementTable, policy: WastePolicy = WastePolicy(),
 
 def _greedy_refill(table: MeasurementTable, choice: np.ndarray,
                    budget: float) -> np.ndarray:
-    """Spend leftover time slack on the best remaining ΔE/Δt swaps."""
+    """Spend leftover time slack on the best remaining ΔE/Δt swaps.
+
+    The running total and the per-kernel (Δt, ΔE) rows are maintained
+    incrementally: a swap only touches kernel ``k``, so only row ``k`` of
+    the delta matrices (and the scalar totals) change — O(n_pairs) per
+    swap instead of the former O(n·n_pairs) ``table.totals`` recompute.
+    """
     choice = choice.copy()
     w = table.weights
     idx = np.arange(len(table.kernels))
+    Tw = table.time * w[:, None]                   # (n, pairs) weighted
+    Ew = table.energy * w[:, None]
+    t_tot = float(Tw[idx, choice].sum())
+    dt = Tw - Tw[idx, choice][:, None]             # delta vs current choice
+    de = Ew - Ew[idx, choice][:, None]
     for _ in range(4 * len(choice)):
-        t_tot, _ = table.totals(choice)
         slack = budget - t_tot
-        cur_t = table.time[idx, choice] * w
-        cur_e = table.energy[idx, choice] * w
-        dt = table.time * w[:, None] - cur_t[:, None]
-        de = table.energy * w[:, None] - cur_e[:, None]
         # candidates: save energy, fit in slack
         ok = (de < -1e-15) & (dt <= slack + 1e-15)
         if not ok.any():
@@ -161,7 +166,10 @@ def _greedy_refill(table: MeasurementTable, choice: np.ndarray,
             k, c = np.unravel_index(np.argmin(ratio), ratio.shape)
         if choice[k] == c:
             break
+        t_tot += dt[k, c]
         choice[k] = c
+        dt[k] = Tw[k] - Tw[k, c]
+        de[k] = Ew[k] - Ew[k, c]
     return choice
 
 

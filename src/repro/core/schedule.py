@@ -26,6 +26,11 @@ class ScheduleEntry:
     core: object
     expected_time_s: float
     count: int = 1     # consecutive instances sharing this clock
+    # exact integration handle: [[kernel_index, n_invocations], ...] into
+    # the plan's kernel list.  Kernel *names* are display-only (they can
+    # collide or contain the "+" coalescing separator); the indices make
+    # EnergyMeter integration exact.
+    kernel_idx: Optional[List[List[int]]] = None
 
 
 @dataclass
@@ -84,14 +89,16 @@ def schedule_from_plan(plan: Plan, meta: Optional[Dict] = None
         e = ScheduleEntry(kernel=k.name, mem=c.mem, core=c.core,
                           expected_time_s=float(t.time[i, plan.choice[i]])
                           * k.invocations,
-                          count=k.invocations)
+                          count=k.invocations,
+                          kernel_idx=[[i, k.invocations]])
         if entries and (entries[-1].mem, entries[-1].core) == (c.mem, c.core):
             entries[-1] = dataclasses.replace(
                 entries[-1],
                 kernel=entries[-1].kernel + f"+{k.name}",
                 expected_time_s=entries[-1].expected_time_s
                 + e.expected_time_s,
-                count=entries[-1].count + e.count)
+                count=entries[-1].count + e.count,
+                kernel_idx=entries[-1].kernel_idx + e.kernel_idx)
         else:
             entries.append(e)
     md = dict(meta or {})
@@ -112,13 +119,19 @@ def schedule_from_coalesced(cp, meta: Optional[Dict] = None
         if entries and (entries[-1].mem, entries[-1].core) == (pair.mem,
                                                                pair.core):
             last = entries[-1]
+            idx = list(last.kernel_idx)
+            if idx and idx[-1][0] == int(ki):
+                idx[-1] = [int(ki), idx[-1][1] + 1]
+            else:
+                idx.append([int(ki), 1])
             entries[-1] = dataclasses.replace(
                 last, expected_time_s=last.expected_time_s + dt,
-                count=last.count + 1)
+                count=last.count + 1, kernel_idx=idx)
         else:
             entries.append(ScheduleEntry(kernel=k.name, mem=pair.mem,
                                          core=pair.core,
-                                         expected_time_s=dt))
+                                         expected_time_s=dt,
+                                         kernel_idx=[[int(ki), 1]]))
     md = dict(meta or {})
     md.update(cp.summary())
     return DVFSSchedule(chip_name=t.chip_name, entries=entries, meta=md)

@@ -14,7 +14,7 @@ paper's Megatron-style extension of llm.c does) and optimizer kernels
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from ..configs.base import ModelConfig, ShapeConfig
 from .power_model import KernelSpec
@@ -545,6 +545,36 @@ class WorkloadBuilder:
 def build_workload(cfg: ModelConfig, shape: ShapeConfig,
                    **kw) -> List[KernelSpec]:
     return WorkloadBuilder(cfg, shape, **kw).build()
+
+
+def decode_slot_buckets(n_slots: int) -> List[int]:
+    """Active-slot-count buckets for continuous-batching decode plans.
+
+    Powers of two up to (and always including) ``n_slots``: a decode step
+    with ``a`` active slots replays the plan of the smallest bucket
+    >= ``a``, so a pool of S slots needs only O(log S) plans instead of S.
+    """
+    if n_slots < 1:
+        raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+    buckets = [1]
+    while buckets[-1] < n_slots:
+        buckets.append(min(2 * buckets[-1], n_slots))
+    return buckets
+
+
+def decode_bucket_workloads(cfg: ModelConfig, shape: ShapeConfig,
+                            n_slots: int, **kw
+                            ) -> "Dict[int, List[KernelSpec]]":
+    """One decode-step kernel list per active-slot bucket.
+
+    ``shape`` must be a decode shape; its ``global_batch`` is overridden
+    with each bucket size (the decode workload scales with the number of
+    sequences actually resident in the batch).
+    """
+    if shape.kind != "decode":
+        raise ValueError(f"decode shape required, got kind={shape.kind!r}")
+    return {b: WorkloadBuilder(cfg, shape, batch_override=b, **kw).build()
+            for b in decode_slot_buckets(n_slots)}
 
 
 def workload_totals(kernels: List[KernelSpec]):

@@ -194,6 +194,22 @@ class EncDecLM:
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
+    def cache_slot_axes(self):
+        """Batch-axis index per cache leaf (for slot-wise admission)."""
+        return {"k": 1, "v": 1, "cross_k": 1, "cross_v": 1}
+
+    def cache_max_seq(self, cache) -> int:
+        return cache["k"].shape[2]
+
+    def prefill_into_slot(self, params, cache, tokens, slot, frames=None):
+        """Prefill one (frames, prompt) pair and install its self- and
+        cross-attention caches into ``slot`` of an existing pool cache."""
+        logits, sub = self.prefill(params, tokens, frames=frames,
+                                   max_seq=self.cache_max_seq(cache),
+                                   remat=False)
+        return logits, cm.write_cache_slot(cache, sub, slot,
+                                           self.cache_slot_axes())
+
     def decode_step(self, params, cache, tokens, pos):
         cfg = self.cfg
         B = tokens.shape[0]

@@ -257,6 +257,22 @@ class HybridLM:
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
+    def cache_slot_axes(self):
+        """Batch-axis index per cache leaf (for slot-wise admission)."""
+        return {"ssm": 1, "conv": 1, "k": 1, "v": 1}
+
+    def cache_max_seq(self, cache) -> int:
+        return cache["k"].shape[2]
+
+    def prefill_into_slot(self, params, cache, tokens, slot):
+        """Prefill one prompt (1, P) and install its SSM state + shared-
+        attention KV into ``slot`` of an existing slot-pool cache."""
+        logits, sub = self.prefill(params, tokens,
+                                   max_seq=self.cache_max_seq(cache),
+                                   remat=False)
+        return logits, cm.write_cache_slot(cache, sub, slot,
+                                           self.cache_slot_axes())
+
     def decode_step(self, params, cache, tokens, pos):
         cfg = self.cfg
         per = cfg.attn_every

@@ -352,6 +352,20 @@ class MambaLM:
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
+    def cache_slot_axes(self):
+        """Batch-axis index per cache leaf (for slot-wise admission)."""
+        return {"ssm": 1, "conv": 1}
+
+    def cache_max_seq(self, cache) -> int:
+        return 0    # constant-size state; no sequence capacity
+
+    def prefill_into_slot(self, params, cache, tokens, slot):
+        """Prefill one prompt (1, P) and install its SSM/conv state into
+        ``slot`` of an existing slot-pool cache."""
+        logits, sub = self.prefill(params, tokens, remat=False)
+        return logits, cm.write_cache_slot(cache, sub, slot,
+                                           self.cache_slot_axes())
+
     def decode_step(self, params, cache, tokens, pos):
         cfg = self.cfg
         x = cm.embed_tokens(params["embed"], tokens[:, None],

@@ -310,6 +310,28 @@ class DecoderLM:
         logits = self.logits(params, x[:, -1:])
         return logits[:, 0], cache
 
+    def cache_slot_axes(self):
+        """Batch-axis index per cache leaf (for slot-wise admission)."""
+        if self.group == 1:
+            return {"k": 1, "v": 1}
+        return {"k_local": 2, "v_local": 2, "k_global": 1, "v_global": 1}
+
+    def cache_max_seq(self, cache) -> int:
+        key = "k" if self.group == 1 else "k_global"
+        return cache[key].shape[2]
+
+    def prefill_into_slot(self, params: Params, cache, tokens: jnp.ndarray,
+                          slot, patch_embeds=None):
+        """Prefill one prompt (1, P) and install its cache into ``slot`` of
+        an existing slot-pool cache (continuous-batching admission).
+        Returns (last-position logits (1, V), updated pool cache)."""
+        logits, sub = self.prefill(params, tokens,
+                                   patch_embeds=patch_embeds,
+                                   max_seq=self.cache_max_seq(cache),
+                                   remat=False)
+        return logits, cm.write_cache_slot(cache, sub, slot,
+                                           self.cache_slot_axes())
+
     def decode_step(self, params: Params, cache, tokens: jnp.ndarray,
                     pos: jnp.ndarray):
         """One decode step. tokens: (B,) int32; pos: (B,) absolute position."""

@@ -1,10 +1,11 @@
 from .energy import FrequencyController, SimulatedController, EnergyMeter, \
     StepEnergy
+from .dvfs_exec import PhaseExecutor
 from .ft import FailureInjector, InjectedFailure, StragglerWatchdog, \
     HeartbeatRegistry, StragglerEvent
 
 __all__ = [
     "FrequencyController", "SimulatedController", "EnergyMeter",
-    "StepEnergy", "FailureInjector", "InjectedFailure",
+    "StepEnergy", "PhaseExecutor", "FailureInjector", "InjectedFailure",
     "StragglerWatchdog", "HeartbeatRegistry", "StragglerEvent",
 ]

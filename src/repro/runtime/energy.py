@@ -89,17 +89,25 @@ class EnergyMeter:
                 t += kt * k.invocations
                 e += ke * k.invocations
             return t, e, 0
-        # schedule entries map 1:1 onto kernels (coalesced); integrate by
-        # kernel name lookup
-        by_name = {}
-        for k in self.kernels:
-            by_name.setdefault(k.name, k)
         t = e = 0.0
         n_sw = self.schedule.n_switches
+        # legacy schedules (entries without indices) fall back to a
+        # best-effort name lookup over the "+"-coalesced display string
+        by_name = {}
+        if any(entry.kernel_idx is None for entry in self.schedule.entries):
+            for k in self.kernels:
+                by_name.setdefault(k.name, k)
         for entry in self.schedule.entries:
             pair = ClockPair(entry.mem, entry.core)
-            names = entry.kernel.split("+")
-            for nm in names:
+            if entry.kernel_idx is not None:
+                # exact path: entries carry (kernel index, count) pairs, so
+                # colliding names or names containing "+" integrate exactly
+                for ki, cnt in entry.kernel_idx:
+                    kt, ke = self.chip.evaluate(self.kernels[int(ki)], pair)
+                    t += kt * cnt
+                    e += ke * cnt
+                continue
+            for nm in entry.kernel.split("+"):
                 k = by_name.get(nm)
                 if k is None:
                     continue

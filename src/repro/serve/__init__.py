@@ -1,3 +1,7 @@
 from .engine import ServeEngine, Request, sample_token
+from .scheduler import Scheduler
+from .batch_state import BatchState
+from .wave import WaveEngine
 
-__all__ = ["ServeEngine", "Request", "sample_token"]
+__all__ = ["ServeEngine", "Request", "sample_token", "Scheduler",
+           "BatchState", "WaveEngine"]

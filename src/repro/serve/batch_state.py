@@ -1,0 +1,38 @@
+"""Device-side state of the continuous-batching slot pool.
+
+``BatchState`` owns the pooled KV/state cache (one batch row per slot, for
+any architecture family — the model's ``cache_slot_axes()`` names where the
+batch dim sits in each leaf), the per-slot decode positions, and the last
+sampled token per slot.  Which slot holds which request is the
+:class:`~repro.serve.scheduler.Scheduler`'s single source of truth.
+Admission writes a freshly prefilled single-sequence cache into one slot
+(:func:`~repro.models.common.write_cache_slot`) without touching the other
+rows, so decode never drains.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class BatchState:
+    """Per-slot device state for a fixed pool of ``n_slots`` sequences."""
+
+    def __init__(self, model, n_slots: int, max_seq: int):
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)   # last sampled
+        self.pos = jnp.zeros((n_slots,), jnp.int32)      # its position
+
+    def activate(self, slot: int, first_token: int, pos: int) -> None:
+        """Arm a slot after admission: ``first_token`` (the prefill
+        sample) will be fed to the decode loop at absolute ``pos``."""
+        self.tokens = self.tokens.at[slot].set(first_token)
+        self.pos = self.pos.at[slot].set(pos)
+
+    def retire(self, slot: int) -> None:
+        """Park a freed slot; its cache row is garbage until re-admission
+        overwrites it (every per-row op is batch-independent, so stale rows
+        cannot perturb live ones)."""
+        self.tokens = self.tokens.at[slot].set(0)
+        self.pos = self.pos.at[slot].set(0)

@@ -1,10 +1,23 @@
-"""Batched serving engine: prefill + decode with slot-based batching.
+"""Continuous-batching serving engine with phase-aware DVFS execution.
 
-A fixed pool of batch slots; finished sequences release their slot and the
-next queued request is prefilled into it (continuous-batching-lite — the
-paper's inference-side discussion, §10 Kakolyris/DynamoLLM, operates in
-exactly this setting).  The engine exposes per-phase kernel workloads so
-the DVFS planner can produce separate prefill/decode clock plans.
+A fixed pool of batch slots; a finished sequence frees its slot and the
+next queued request is prefilled into that slot *mid-decode*, without
+draining the batch (the setting of the paper's §10 inference outlook —
+Kakolyris/DynamoLLM operate here).  Responsibilities split three ways:
+
+* :class:`~repro.serve.scheduler.Scheduler` — admission queue + slot
+  lifecycle (host-side bookkeeping only),
+* :class:`~repro.serve.batch_state.BatchState` — pooled caches, positions,
+  active mask (device-side state),
+* ``ServeEngine`` (here) — the jitted model math: slot-wise prefill on
+  admission and a ``lax.scan`` decode loop over the *full* slot pool,
+  dispatched in power-of-two-sized chunks so one jit call advances every
+  live sequence several tokens.
+
+When given a :class:`~repro.runtime.dvfs_exec.PhaseExecutor`, the engine
+replays the offline :class:`~repro.core.phase_plan.PhasePlanBundle` around
+every phase transition (prefill vs decode, bucketed by active-slot count)
+— the plan → runtime loop, closed.
 """
 from __future__ import annotations
 
@@ -15,6 +28,10 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+
+from .batch_state import BatchState
+from .scheduler import Scheduler
 
 
 @dataclass
@@ -24,6 +41,11 @@ class Request:
     max_new_tokens: int = 16
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # engine decode-step counter at completion (latency-in-steps metric)
+    finished_step: Optional[int] = None
+    # family-specific prefill inputs (encdec: {"frames": ...};
+    # vlm: {"patch_embeds": ...})
+    extras: Dict[str, Any] = field(default_factory=dict)
 
 
 def sample_token(logits: jnp.ndarray, rng, temperature: float = 0.0):
@@ -34,52 +56,145 @@ def sample_token(logits: jnp.ndarray, rng, temperature: float = 0.0):
         .astype(jnp.int32)
 
 
+def _chunk_len(n: int, cap: int) -> int:
+    """Largest power of two <= min(n, cap): bounds both over-decode (none —
+    chunks never outrun the shortest live request) and jit recompiles
+    (log2 distinct scan lengths)."""
+    n = min(n, cap)
+    p = 1
+    while 2 * p <= n:
+        p *= 2
+    return p
+
+
 class ServeEngine:
-    """Single-host batched engine over a repro model."""
+    """Single-host continuous-batching engine over a repro model."""
 
     def __init__(self, model, params, batch_slots: int = 4,
-                 max_seq: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_seq: int = 512, temperature: float = 0.0,
+                 seed: int = 0, executor=None, max_chunk: int = 16):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.temperature = temperature
+        self.seed = seed
         self.rng = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(model.decode_step)
+        self.executor = executor
+        self.max_chunk = max_chunk
+        self.scheduler = Scheduler(batch_slots)
+        self.state = BatchState(model, batch_slots, max_seq)
+        self.n_decode_steps = 0           # jitted chunk-steps executed
+        self._prefill = jax.jit(model.prefill_into_slot)
+        self._chunk = jax.jit(self._decode_chunk)
 
-    def _prefill_batch(self, prompts: np.ndarray):
-        """prompts: (B, P). Returns (next_tokens, cache, pos)."""
-        tokens = jnp.asarray(prompts, jnp.int32)
-        logits, cache = self.model.prefill(self.params, tokens,
-                                           max_seq=self.max_seq)
+    def reset(self) -> None:
+        """Clear serving state for a fresh workload; jitted functions (and
+        their compile caches) survive — steady-state benchmarking."""
+        self.rng = jax.random.PRNGKey(self.seed)
+        self.scheduler = Scheduler(self.slots)
+        self.state = BatchState(self.model, self.slots, self.max_seq)
+        self.n_decode_steps = 0
+        if self.executor is not None:
+            self.executor.reset()
+
+    # -- jitted decode loop over the full slot pool ----------------------
+    def _decode_chunk(self, params, cache, tokens, pos, keys):
+        """Scan ``len(keys)`` decode steps over every slot; returns the
+        stacked samples (n, n_slots) plus the advanced state."""
+        temperature = self.temperature
+
+        def step(carry, key):
+            tokens, pos, cache = carry
+            logits, cache = self.model.decode_step(params, cache, tokens,
+                                                   pos)
+            nxt = sample_token(logits, key, temperature)
+            return (nxt, pos + 1, cache), nxt
+
+        (tokens, pos, cache), out = lax.scan(step, (tokens, pos, cache),
+                                             keys)
+        return tokens, pos, cache, out
+
+    # -- admission -------------------------------------------------------
+    def _admit(self) -> None:
+        """Fill every free slot from the queue (prefill phase per admit)."""
+        while True:
+            nxt = self.scheduler.admit_next()
+            if nxt is None:
+                break
+            slot, req = nxt
+            if req.max_new_tokens < 1:
+                # nothing to generate: complete without touching the pool
+                # (matches the wave engine, which emits no tokens here)
+                req.done = True
+                req.finished_step = self.n_decode_steps
+                self.scheduler.release(slot)
+                continue
+            prompt = np.asarray(req.prompt, np.int32)
+            if prompt.size + req.max_new_tokens > self.max_seq + 1:
+                raise ValueError(
+                    f"request {req.uid}: prompt {prompt.size} + "
+                    f"{req.max_new_tokens} new tokens exceeds "
+                    f"max_seq={self.max_seq}")
+            if self.executor is not None:
+                self.executor.on_prefill()
+            logits, self.state.cache = self._prefill(
+                self.params, self.state.cache, jnp.asarray(prompt[None]),
+                slot, **req.extras)
+            self.rng, k = jax.random.split(self.rng)
+            first = int(sample_token(logits, k, self.temperature)[0])
+            req.generated.append(first)
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.finished_step = self.n_decode_steps
+                self.scheduler.release(slot)
+            else:
+                self.state.activate(slot, first, prompt.size)
+
+    # -- decode ----------------------------------------------------------
+    def _decode_round(self) -> None:
+        """One chunked decode dispatch; releases finished slots after."""
+        live = [(s, r) for s, r in enumerate(self.scheduler.slots)
+                if r is not None]
+        remaining = min(r.max_new_tokens - len(r.generated)
+                        for _, r in live)
+        n = _chunk_len(remaining, self.max_chunk)
         self.rng, k = jax.random.split(self.rng)
-        nxt = sample_token(logits, k, self.temperature)
-        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
-        return nxt, cache, pos
+        keys = jax.random.split(k, n)
+        if self.executor is not None:
+            for _ in range(n):
+                self.executor.on_decode(len(live))
+        (self.state.tokens, self.state.pos, self.state.cache,
+         out) = self._chunk(self.params, self.state.cache,
+                            self.state.tokens, self.state.pos, keys)
+        self.n_decode_steps += n
+        toks = np.asarray(out)                       # (n, n_slots)
+        for slot, req in live:
+            req.generated.extend(int(t) for t in toks[:, slot])
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.finished_step = self.n_decode_steps
+                self.scheduler.release(slot)
+                self.state.retire(slot)
+
+    # -- driving ---------------------------------------------------------
+    def submit(self, requests: List[Request]) -> None:
+        self.scheduler.submit(requests)
+
+    def run(self) -> None:
+        """Drain the queue: admit into free slots, decode in chunks."""
+        while not self.scheduler.done():
+            self._admit()
+            if self.scheduler.n_active == 0:
+                continue        # every admitted request finished at prefill
+            self._decode_round()
+        if self.executor is not None:
+            self.executor.finish()
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve requests in waves of ``slots`` (equal prompt lengths per
-        wave; the pipeline pads to the wave max)."""
-        queue = list(requests)
-        while queue:
-            wave = queue[:self.slots]
-            queue = queue[self.slots:]
-            plen = max(len(r.prompt) for r in wave)
-            prompts = np.zeros((len(wave), plen), np.int32)
-            for i, r in enumerate(wave):
-                prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
-            nxt, cache, pos = self._prefill_batch(prompts)
-            steps = max(r.max_new_tokens for r in wave)
-            for _ in range(steps):
-                for i, r in enumerate(wave):
-                    if len(r.generated) < r.max_new_tokens:
-                        r.generated.append(int(nxt[i]))
-                if all(len(r.generated) >= r.max_new_tokens for r in wave):
-                    break
-                logits, cache = self._decode(self.params, cache, nxt, pos)
-                pos = pos + 1
-                self.rng, k = jax.random.split(self.rng)
-                nxt = sample_token(logits, k, self.temperature)
-            for r in wave:
-                r.done = True
+        self.submit(requests)
+        self.run()
         return requests
+
+    def energy_summary(self) -> Optional[Dict]:
+        return None if self.executor is None else self.executor.summary()

@@ -1,0 +1,73 @@
+"""Admission queue + slot lifecycle for the continuous-batching engine.
+
+The scheduler owns *which request sits in which slot* and nothing else:
+device-side state (caches, positions, masks) lives in
+:class:`~repro.serve.batch_state.BatchState`, model math in the engine.
+A finished sequence frees its slot and the head of the admission queue is
+prefilled into that slot mid-decode — the batch never drains.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Iterable, List, Optional, Tuple
+
+
+class Scheduler:
+    """FCFS admission queue over a fixed pool of batch slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.queue: Deque = deque()
+        self.slots: List[Optional[object]] = [None] * n_slots
+        # lifecycle counters (surfaced in benchmark summaries)
+        self.n_admitted = 0
+        self.n_completed = 0
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, requests: Iterable) -> None:
+        self.queue.extend(requests)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- slots ------------------------------------------------------------
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def admit_next(self) -> Optional[Tuple[int, object]]:
+        """Pop the queue head into the first free slot, if both exist."""
+        if not self.queue:
+            return None
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        req = self.queue.popleft()
+        self.slots[slot] = req
+        self.n_admitted += 1
+        return slot, req
+
+    def release(self, slot: int):
+        """Free a slot; returns the request that occupied it."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        self.n_completed += 1
+        return req
+
+    def done(self) -> bool:
+        return not self.queue and self.n_active == 0

@@ -1,0 +1,80 @@
+"""Wave-based batching baseline (the pre-continuous engine).
+
+Serves requests in rigid fixed-size waves: a wave of ``slots`` requests is
+prefilled together and decoded until *every* member finishes, then the
+next wave starts.  Kept as the benchmark baseline for
+``benchmarks/serve_continuous.py`` and the parity tests — a skewed
+generation-length mix makes every short request in a wave idle-wait on the
+wave's straggler, which is exactly the waste continuous batching removes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Request, sample_token
+
+
+class WaveEngine:
+    """Single-host batched engine over a repro model (wave scheduling)."""
+
+    def __init__(self, model, params, batch_slots: int = 4,
+                 max_seq: int = 512, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.seed = seed
+        self.rng = jax.random.PRNGKey(seed)
+        self.n_decode_steps = 0
+        self._decode = jax.jit(model.decode_step)
+
+    def reset(self) -> None:
+        """Clear serving state; jit caches survive (benchmarking)."""
+        self.rng = jax.random.PRNGKey(self.seed)
+        self.n_decode_steps = 0
+
+    def _prefill_batch(self, prompts: np.ndarray):
+        """prompts: (B, P). Returns (next_tokens, cache, pos)."""
+        tokens = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self.model.prefill(self.params, tokens,
+                                           max_seq=self.max_seq)
+        self.rng, k = jax.random.split(self.rng)
+        nxt = sample_token(logits, k, self.temperature)
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return nxt, cache, pos
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve requests in waves of ``slots`` (equal prompt lengths per
+        wave; the pipeline pads to the wave max)."""
+        queue = list(requests)
+        while queue:
+            wave = queue[:self.slots]
+            queue = queue[self.slots:]
+            plen = max(len(r.prompt) for r in wave)
+            prompts = np.zeros((len(wave), plen), np.int32)
+            for i, r in enumerate(wave):
+                prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            nxt, cache, pos = self._prefill_batch(prompts)
+            steps = max(r.max_new_tokens for r in wave)
+            for _ in range(steps):
+                for i, r in enumerate(wave):
+                    if len(r.generated) < r.max_new_tokens:
+                        r.generated.append(int(nxt[i]))
+                        if len(r.generated) >= r.max_new_tokens:
+                            r.finished_step = self.n_decode_steps
+                if all(len(r.generated) >= r.max_new_tokens for r in wave):
+                    break
+                logits, cache = self._decode(self.params, cache, nxt, pos)
+                self.n_decode_steps += 1
+                pos = pos + 1
+                self.rng, k = jax.random.split(self.rng)
+                nxt = sample_token(logits, k, self.temperature)
+            for r in wave:
+                r.done = True
+        return requests

@@ -11,6 +11,8 @@ import repro.models.common as cm
 from repro.configs import REGISTRY, smoke_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow
+
 CASES = ["llama3.2-1b", "llama4-scout-17b-a16e", "seamless-m4t-medium",
          "internvl2-1b", "mamba2-370m", "zamba2-7b", "gpt3-xl"]
 

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.flash_attention.ops import flash_attention_train
 from repro.kernels.flash_attention.ref import attention_ref
 
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(7)
 
 

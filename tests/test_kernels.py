@@ -17,6 +17,7 @@ def _tol(dtype):
         else dict(rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,Sq,Sk,H,KV,D", [
     (2, 64, 64, 4, 2, 16),
     (1, 48, 48, 4, 4, 16),

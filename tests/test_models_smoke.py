@@ -30,6 +30,7 @@ def make_batch(cfg, B=2, S=32, seed=0):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = smoke_config(REGISTRY[arch])
@@ -43,6 +44,7 @@ def test_train_step_smoke(arch):
     assert abs(float(loss) - math.log(cfg.vocab_size)) < 1.5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_grads_finite(arch):
     cfg = smoke_config(REGISTRY[arch])
@@ -56,6 +58,7 @@ def test_grads_finite(arch):
         assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_abstract_params_match_init(arch):
     """abstract/axes trees must mirror the materialized param tree."""

@@ -51,6 +51,7 @@ def test_unembed_gradient_flows_only_to_real_rows():
     assert float(jnp.abs(g["wte"]).sum()) > 0
 
 
+@pytest.mark.slow
 def test_attention_seq_fallback_when_heads_dont_divide():
     """On a mesh whose model axis does not divide the head count, the
     attention computation shards over the sequence instead of replicating
@@ -62,6 +63,7 @@ def test_attention_seq_fallback_when_heads_dont_divide():
         import jax, jax.numpy as jnp
         import repro.models.common as cm
         from repro.hw.hlo_parse import analyze_hlo
+        from repro.parallel.sharding import use_mesh
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         B, S, H, D = 4, 64, 6, 8     # H=6 does not divide model=4
 
@@ -69,7 +71,7 @@ def test_attention_seq_fallback_when_heads_dont_divide():
             return cm.chunked_attention(q, k, v, causal=True, block_k=32)
 
         sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             comp = jax.jit(f).lower(sds(B, S, H, D), sds(B, S, H, D),
                                     sds(B, S, H, D)).compile()
         an = analyze_hlo(comp.as_text())
@@ -84,6 +86,7 @@ def test_attention_seq_fallback_when_heads_dont_divide():
     assert "OK" in out.stdout
 
 
+@pytest.mark.slow
 def test_moe_no_drop_keeps_every_token():
     from repro.configs import REGISTRY, smoke_config
     cfg = smoke_config(REGISTRY["granite-moe-1b-a400m"])

@@ -11,6 +11,8 @@ import repro.models.common as cm
 from repro.configs import REGISTRY, smoke_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "llama4-scout-17b-a16e"])
 def test_pallas_attention_path_matches_jnp(arch, monkeypatch):

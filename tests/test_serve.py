@@ -11,6 +11,8 @@ from repro.configs import REGISTRY, smoke_config
 from repro.models import build_model
 from repro.serve import Request, ServeEngine
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine():

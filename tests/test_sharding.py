@@ -82,6 +82,7 @@ def test_cache_specs_decode_sharding():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_small_mesh_train_step_runs():
     """End-to-end: jit train step with FSDP+TP shardings actually executes
     on 8 host devices and returns finite loss."""
@@ -93,12 +94,13 @@ def test_small_mesh_train_step_runs():
         from repro.parallel.sharding import param_specs, batch_specs
         from repro.train import OptimizerConfig, make_train_step, \\
             init_train_state
+        from repro.parallel.sharding import use_mesh
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         cfg = smoke_config(REGISTRY["llama3.2-1b"])
         model = build_model(cfg, block_k=16)
         step = make_train_step(model, OptimizerConfig(lr=1e-3),
                                accum_steps=2, remat=True)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             state = init_train_state(model, jax.random.PRNGKey(0))
             rng = np.random.default_rng(0)
             batch = {k: jnp.asarray(rng.integers(0, cfg.vocab_size,

@@ -7,6 +7,8 @@ import pytest
 
 from repro.models.ssm import ssd_chunked, ssd_decode_step
 
+pytestmark = pytest.mark.slow
+
 
 def rand_inputs(rng, B=2, S=24, H=4, P=8, N=8, G=2):
     x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)

@@ -16,6 +16,8 @@ from repro.runtime import (EnergyMeter, FailureInjector, StragglerWatchdog)
 from repro.train import OptimizerConfig, make_train_step
 from repro.train.loop import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow
+
 
 def make_trainer(tmp_path, total_steps=12, fail_at=(), meter=None):
     cfg = smoke_config(REGISTRY["gpt3-xl"])
