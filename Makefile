@@ -1,19 +1,25 @@
 # Test tiers.
 #
-# test-fast : the sub-60s tier — everything not marked @pytest.mark.slow
-#             (slow = subprocess multi-device tests, Pallas interpret-mode
-#             kernels, full train-loop / system integration runs).
+# test-fast : the sub-90s tier — docs-check plus everything not marked
+#             @pytest.mark.slow (slow = subprocess multi-device tests,
+#             Pallas interpret-mode kernels, full train-loop / system
+#             integration runs).
 # test      : the full tier-1 suite (~5 min).
 
 PYTEST = PYTHONPATH=src python -m pytest -q
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench docs-check
 
 test:
 	$(PYTEST)
 
-test-fast:
+test-fast: docs-check
 	$(PYTEST) -m "not slow"
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+
+# Verify every command fenced in docs/*.md against the benchmark
+# registry and every [[artifact]] reference against the working tree.
+docs-check:
+	PYTHONPATH=src python tools/docs_check.py

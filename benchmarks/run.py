@@ -1,17 +1,21 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (derived = the benchmark's headline
-metric, typically the energy saving in percent).
+``python -m benchmarks.run`` runs every registered benchmark and prints
+``name,us_per_call,derived`` CSV (derived = the benchmark's headline
+metric, typically the energy saving in percent).  ``--list`` prints the
+registry (the names ``docs/claims.md`` maps paper claims onto; the
+``make docs-check`` gate verifies every documented command against it);
+``--only NAME [NAME...]`` runs a subset.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 from . import (pass_level, kernel_overview, kernel_table, totals,
                relaxed_waste, validation, data_parallel, tensor_parallel,
                heterogeneity, switch_latency, dvfs_by_arch, roofline,
-               search_cost)
+               search_cost, serve_continuous, train_dvfs)
 
 
 def _derived(name, out):
@@ -45,6 +49,10 @@ def _derived(name, out):
         if name == "roofline":
             ok = [r for r in out["rows"] if r.get("status") == "ok"]
             return len(ok)
+        if name == "serve_continuous":
+            return out["energy"]["totals"]["energy_pct"]
+        if name == "train_dvfs":
+            return out["kernel_level"]["energy_pct"]
     except Exception:
         return ""
     return ""
@@ -64,12 +72,36 @@ BENCHES = [
     ("dvfs_by_arch", dvfs_by_arch.main),        # beyond-paper, 10 archs
     ("search_cost", search_cost.main),          # beyond-paper, §4 search
     ("roofline", roofline.main),                # §Roofline
+    ("train_dvfs", train_dvfs.main),            # §5-6 executed + §7-8 xfer
+    ("serve_continuous", serve_continuous.main),  # serving stack, §10-11
 ]
 
+REGISTRY = dict(BENCHES)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
+    ap.add_argument("--only", nargs="+", metavar="NAME",
+                    help="run only these registered benchmarks")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, _ in BENCHES:
+            print(name)
+        return
+
+    selected = BENCHES
+    if args.only:
+        unknown = [n for n in args.only if n not in REGISTRY]
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                             f"--list shows the registry")
+        selected = [(n, REGISTRY[n]) for n in args.only]
+
     rows = []
-    for name, fn in BENCHES:
+    for name, fn in selected:
         t0 = time.perf_counter()
         try:
             out = fn(verbose=True)

@@ -1,0 +1,110 @@
+"""The paper's headline training claim, executed end-to-end (§5–6, §7–8).
+
+Three measurements on the GPT-3-xl train step (seq 1024, batch 40):
+
+1. **Kernel-level vs pass-level vs auto** — both planned at the same
+   relaxed-waste budget (tau = 0.6%, the paper's operating point) and
+   *executed* through :class:`~repro.runtime.dvfs_exec.TrainPhaseExecutor`
+   over ``N_STEPS`` optimizer steps: per-phase clock replay, switch
+   overhead charged, energy integrated against the auto-governor twin.
+   Paper: kernel-level recovers 14.6% of training energy at 0.6% slowdown
+   where pass-level recovers ~2%.
+2. **DP transfer** — the single-device bundle replayed under DP=2/4
+   meshes (per-device batch 20/10) vs replanning each mesh from scratch.
+3. **TP transfer** — the same bundle replayed under TP=2/4 meshes
+   (sharded kernels, roofline-remapped transfer) vs per-mesh replanning.
+   Paper §7–8: the discovered frequencies translate across parallelism.
+
+Run:  PYTHONPATH=src python -m benchmarks.train_dvfs
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import get_config, get_shape
+from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
+                        pass_level_plan, plan_train_bundle)
+from repro.launch.mesh import MeshSpec
+from repro.parallel.plan_transfer import compare_transfer
+from repro.runtime import TrainPhaseExecutor
+from .common import save_artifact
+
+ARCH = "gpt3-xl"
+SHAPE = "paper_gpt3xl"
+CHIP = "tpu-v5e"          # the µs-switch chip: per-kernel DVFS is realizable
+TAU = 0.006               # paper's 0.6% slowdown operating point
+N_STEPS = 10
+N_REPS = 5
+MESHES = (MeshSpec(dp=2), MeshSpec(dp=4), MeshSpec(tp=2), MeshSpec(tp=4))
+
+
+def _execute(bundle, chip, n_steps: int) -> Dict:
+    ex = TrainPhaseExecutor(bundle, chip)
+    for s in range(n_steps):
+        ex.on_step(s)
+    ex.finish()
+    return ex.summary()
+
+
+def main(verbose: bool = True) -> Dict:
+    cfg = get_config(ARCH)
+    shape = get_shape(SHAPE)
+    chip = get_chip(CHIP)
+    policy = WastePolicy(TAU)
+
+    # one campaign; both granularities plan against the same table
+    kernels = build_workload(cfg, shape, include_optimizer=True)
+    table = Campaign(chip, seed=0, n_reps=N_REPS).run(kernels)
+    kernel_bundle = plan_train_bundle(cfg, chip, shape=shape,
+                                      policy=policy, table=table)
+    pass_bundle = plan_train_bundle(cfg, chip, shape=shape, policy=policy,
+                                    table=table, planner=pass_level_plan)
+    kernel = _execute(kernel_bundle, chip, N_STEPS)
+    passl = _execute(pass_bundle, chip, N_STEPS)
+
+    transfer = [r.to_dict() for r in
+                compare_transfer(kernel_bundle, cfg, chip, shape,
+                                 list(MESHES), policy, n_reps=N_REPS)]
+    max_vs_replan = max(abs(r["energy_vs_replan_pct"]) for r in transfer)
+
+    out = {
+        "arch": ARCH, "chip": CHIP, "tau": TAU, "n_steps": N_STEPS,
+        "kernel_level": kernel["totals"],
+        "kernel_phases": kernel["phases"],
+        "pass_level": passl["totals"],
+        "transfer": transfer,
+        "max_transfer_vs_replan_pct": max_vs_replan,
+        "kernel_beats_pass": kernel["totals"]["energy_pct"]
+        < passl["totals"]["energy_pct"],
+        "bundle_summary": kernel_bundle.summary(),
+    }
+    save_artifact("train_dvfs", out)
+
+    if verbose:
+        kt, pt = kernel["totals"], passl["totals"]
+        print(f"[train_dvfs] {ARCH} on {CHIP}, tau={TAU}, "
+              f"{N_STEPS} executed steps:")
+        print(f"  auto        :   +0.00% time    +0.00% energy")
+        print(f"  pass-level  : {pt['time_pct']:+8.2f}% time "
+              f"{pt['energy_pct']:+8.2f}% energy "
+              f"({pt['n_switches']} switches)")
+        print(f"  kernel-level: {kt['time_pct']:+8.2f}% time "
+              f"{kt['energy_pct']:+8.2f}% energy "
+              f"({kt['n_switches']} switches; paper: -14.6% at +0.6%)")
+        for name, row in kernel["phases"].items():
+            print(f"    {name:4s}: time {row['time_pct']:+7.3f}%  "
+                  f"energy {row['energy_pct']:+8.3f}%  "
+                  f"switches/step {row['n_switches'] // N_STEPS}")
+        print(f"  plan transfer (vs per-mesh replanning):")
+        for r in transfer:
+            print(f"    {r['mesh']:10s}: xfer {r['transfer_energy_pct']:+7.2f}% "
+                  f"replan {r['replan_energy_pct']:+7.2f}% "
+                  f"-> within {r['energy_vs_replan_pct']:+5.2f}% "
+                  f"(remapped {r['n_remapped']}, repaired {r['n_repaired']})")
+        print(f"  max |transfer - replan| = {max_vs_replan:.2f}% "
+              f"(criterion: <= 2%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

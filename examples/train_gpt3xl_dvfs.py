@@ -1,9 +1,13 @@
-"""End-to-end training driver: GPT-3-xl-family model + kernel-level DVFS.
+"""End-to-end training driver: GPT-3-xl-family model + executed
+kernel-level DVFS.
 
 Trains a reduced GPT-3 on the synthetic corpus with the fault-tolerant
-Trainer (checkpoint/restart, straggler watchdog) while the EnergyMeter
-accounts per-step energy under the discovered strict-waste DVFS schedule
-vs the auto baseline.  An injected failure exercises the restart path.
+Trainer (checkpoint/restart, straggler watchdog) while a
+``TrainPhaseExecutor`` *executes* the planned fwd/bwd/opt clock schedules
+around every step — per-phase frequency actuation plus exact per-phase
+energy accounting vs the auto governor.  An injected failure exercises
+the restart path, including mid-plan resume of the executor's books; the
+``TrainPlanBundle`` is saved to artifacts/train_plan_bundle.json.
 
 Run:  PYTHONPATH=src python examples/train_gpt3xl_dvfs.py \\
           [--steps 60] [--d-model 256] [--layers 4] [--full]
@@ -15,12 +19,11 @@ import dataclasses
 import jax
 
 from repro.configs import get_config, get_shape, smoke_config
-from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
-                        global_plan, schedule_from_plan)
+from repro.core import WastePolicy, get_chip, plan_train_bundle
 from repro.ckpt import CheckpointManager
 from repro.data import DataPipeline
 from repro.models import build_model
-from repro.runtime import EnergyMeter, FailureInjector
+from repro.runtime import FailureInjector, TrainPhaseExecutor
 from repro.train import OptimizerConfig, make_train_step
 from repro.train.loop import Trainer, TrainerConfig
 
@@ -57,15 +60,16 @@ def main():
     shape = dataclasses.replace(get_shape("paper_gpt3xl"),
                                 seq_len=args.seq,
                                 global_batch=args.batch)
-    kernels = build_workload(cfg, shape)
     chip = get_chip("tpu-v5e")             # IVR-class switch latency
-    table = Campaign(chip, seed=0, n_reps=5).run(kernels)
-    plan = global_plan(table, WastePolicy(0.0))
-    print(f"DVFS plan: {plan.energy_pct:+.2f}% energy at "
-          f"{plan.time_pct:+.2f}% time (strict waste)")
-    sched = schedule_from_plan(plan)
+    bundle = plan_train_bundle(cfg, chip, shape=shape,
+                               policy=WastePolicy(0.006), n_reps=5)
+    bundle.save("artifacts/train_plan_bundle.json")
+    for ph, row in bundle.summary()["phases"].items():
+        print(f"  {ph:4s} plan: {row['energy_pct']:+7.2f}% energy at "
+              f"{row['time_pct']:+6.2f}% time "
+              f"({row['n_switches']} switches)")
 
-    # --- fault-tolerant training with energy metering ---
+    # --- fault-tolerant training with executed DVFS ---
     model = build_model(cfg, block_k=64)
     step = make_train_step(model, OptimizerConfig(lr=3e-3, warmup_steps=10,
                                                   decay_steps=args.steps),
@@ -76,7 +80,7 @@ def main():
         model, step, pipeline,
         CheckpointManager(args.ckpt_dir, keep=2),
         TrainerConfig(total_steps=args.steps, ckpt_every=10, log_every=10),
-        energy_meter=EnergyMeter(chip, kernels, schedule=sched),
+        executor=TrainPhaseExecutor(bundle, chip),
         failure_injector=FailureInjector(
             [args.fail_at] if args.fail_at >= 0 else []))
     out = trainer.run()
@@ -85,9 +89,11 @@ def main():
     last = trainer.history[-1]["loss"]
     print(f"loss {first:.3f} -> {last:.3f} over {out['final_step']} steps "
           f"({out['restarts']} restart(s) from injected failures)")
-    e = out["energy"]
-    print(f"simulated: {e['time_s']*1e3:.1f} ms, {e['energy_j']:.2f} J "
-          f"under the DVFS schedule")
+    tot = out["dvfs"]["totals"]
+    print(f"executed DVFS: {tot['energy_pct']:+.2f}% energy at "
+          f"{tot['time_pct']:+.2f}% time vs auto "
+          f"({tot['n_switches']} clock switches over "
+          f"{tot['steps']} phase executions)")
 
 
 if __name__ == "__main__":

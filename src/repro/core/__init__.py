@@ -15,7 +15,10 @@ from .coalesce import CoalescedPlan, coalesced_global_plan, expand_sequence
 from .search import search_plan, SearchReport, evaluate_against_truth
 from .schedule import DVFSSchedule, ScheduleEntry, schedule_from_plan, \
     schedule_from_coalesced
-from .phase_plan import PhasePlan, PhasePlanBundle, plan_phase_bundle
+from .phase_plan import (PhasePlan, PhasePlanBundle, plan_phase_bundle,
+                         TrainPlanBundle, plan_train_bundle, compile_phase,
+                         train_phase_of, TRAIN_PHASES,
+                         calibrate_workload_against_hlo)
 
 __all__ = [
     "AUTO", "ClockPair", "FrequencyGrid", "paper_grid_3080ti",
@@ -30,5 +33,7 @@ __all__ = [
     "schedule_from_coalesced", "search_plan", "SearchReport",
     "evaluate_against_truth", "decode_slot_buckets",
     "decode_bucket_workloads", "PhasePlan", "PhasePlanBundle",
-    "plan_phase_bundle",
+    "plan_phase_bundle", "TrainPlanBundle", "plan_train_bundle",
+    "compile_phase", "train_phase_of", "TRAIN_PHASES",
+    "calibrate_workload_against_hlo",
 ]

@@ -26,6 +26,10 @@ from .measure import MeasurementTable
 from .objectives import WastePolicy, pct
 from .planner import Plan
 
+# modeled power draw during a clock switch (paper §9 ballpark); every
+# accounting site (planner, meter, executor, transfer) must share it
+SWITCH_POWER_W = 100.0
+
 
 def expand_sequence(table: MeasurementTable) -> np.ndarray:
     """Approximate execution order of kernel instances.
@@ -125,7 +129,7 @@ def _dp_for_lambda(T: np.ndarray, E: np.ndarray, lam: float,
 def coalesced_global_plan(table: MeasurementTable,
                           policy: WastePolicy = WastePolicy(),
                           switch_latency_s: Optional[float] = None,
-                          switch_power_w: float = 100.0,
+                          switch_power_w: float = SWITCH_POWER_W,
                           sequence: Optional[np.ndarray] = None
                           ) -> CoalescedPlan:
     """Energy-min plan under the time budget *including* switch costs."""

@@ -1,11 +1,12 @@
 from .energy import FrequencyController, SimulatedController, EnergyMeter, \
     StepEnergy
-from .dvfs_exec import PhaseExecutor
+from .dvfs_exec import PhaseExecutor, TrainPhaseExecutor
 from .ft import FailureInjector, InjectedFailure, StragglerWatchdog, \
     HeartbeatRegistry, StragglerEvent
 
 __all__ = [
     "FrequencyController", "SimulatedController", "EnergyMeter",
-    "StepEnergy", "PhaseExecutor", "FailureInjector", "InjectedFailure",
+    "StepEnergy", "PhaseExecutor", "TrainPhaseExecutor", "FailureInjector",
+    "InjectedFailure",
     "StragglerWatchdog", "HeartbeatRegistry", "StragglerEvent",
 ]

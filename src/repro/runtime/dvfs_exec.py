@@ -1,41 +1,65 @@
-"""Online DVFS execution for serving: phase-plan replay + accounting.
+"""Online DVFS execution: phase-plan replay + accounting for serving and
+training.
 
-``PhaseExecutor`` closes the plan → runtime loop: the planner emits a
-:class:`~repro.core.phase_plan.PhasePlanBundle` offline, and the serving
-engine calls ``on_prefill`` / ``on_decode(n_active)`` at each phase
-transition.  The executor replays that phase's clock schedule through a
-:class:`~repro.runtime.energy.FrequencyController` and integrates energy
+The executors close the plan → runtime loop.  The planner emits a bundle
+offline (:class:`~repro.core.phase_plan.PhasePlanBundle` for serving,
+:class:`~repro.core.phase_plan.TrainPlanBundle` for training) and the
+runtime replays each phase's clock schedule through a
+:class:`~repro.runtime.energy.FrequencyController`, integrating energy
 with one :class:`~repro.runtime.energy.EnergyMeter` per phase (plus an
 auto-clock twin, so savings are measured against the governor baseline the
 paper compares to).
+
+* :class:`PhaseExecutor` — serving.  The engine calls ``on_prefill`` /
+  ``on_decode(n_active)`` at each phase transition.
+* :class:`TrainPhaseExecutor` — training.  The
+  :class:`~repro.train.loop.Trainer` calls ``on_step(step)`` once per
+  optimizer step; the executor replays the ``fwd`` → ``bwd`` → ``opt``
+  schedules back-to-back and returns that step's
+  :class:`~repro.runtime.energy.StepEnergy`.  Its accounting state
+  round-trips through ``state_dict()`` / ``load_state_dict()`` so a
+  checkpoint-restart resumes energy accounting mid-plan instead of
+  dropping the pre-failure records (the FT drill in
+  ``tests/test_plan_transfer.py`` exercises exactly this).
+
+Train-phase lifecycle (one optimizer step)::
+
+    on_step(s):  replay fwd clocks -> meter fwd
+                 replay bwd clocks -> meter bwd
+                 replay opt clocks -> meter opt
+                 return StepEnergy(s, Σ time, Σ energy, Σ switches)
+    finish():    return the chip to the governor (auto) clocks
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
+from ..core.coalesce import SWITCH_POWER_W
 from ..core.freq import AUTO, ClockPair
 from ..core.objectives import pct
-from ..core.phase_plan import PhasePlanBundle
+from ..core.phase_plan import PhasePlan, PhasePlanBundle, TrainPlanBundle
 from ..core.power_model import Chip
-from .energy import EnergyMeter, FrequencyController, SimulatedController
+from .energy import EnergyMeter, FrequencyController, SimulatedController, \
+    StepEnergy
 
 
-class PhaseExecutor:
-    """Replays a PhasePlanBundle around serve-engine phase transitions."""
+class _BundleExecutor:
+    """Shared replay + accounting machinery over a dict of PhasePlans."""
 
-    def __init__(self, bundle: PhasePlanBundle, chip: Chip,
-                 controller: Optional[FrequencyController] = None):
-        if bundle.chip_name != chip.name:
-            raise ValueError(f"bundle planned for {bundle.chip_name!r}, "
+    def __init__(self, phases: Dict[str, PhasePlan], chip: Chip,
+                 controller: Optional[FrequencyController] = None,
+                 bundle_chip_name: Optional[str] = None):
+        if bundle_chip_name is not None and bundle_chip_name != chip.name:
+            raise ValueError(f"bundle planned for {bundle_chip_name!r}, "
                              f"executing on {chip.name!r}")
-        self.bundle = bundle
         self.chip = chip
         self.controller = controller or SimulatedController(chip)
         self.meters: Dict[str, EnergyMeter] = {}
         self.baseline: Dict[str, EnergyMeter] = {}
         self.switches: Dict[str, int] = {}
         self._steps: Dict[str, int] = {}
-        for name, plan in bundle.phases().items():
+        self._phases = phases
+        for name, plan in phases.items():
             self.meters[name] = EnergyMeter(chip, plan.kernels,
                                             plan.schedule)
             self.baseline[name] = EnergyMeter(chip, plan.kernels, None)
@@ -52,28 +76,21 @@ class PhaseExecutor:
             self._steps[name] = 0
         self.controller.reset()
 
-    # -- phase hooks -----------------------------------------------------
-    def on_prefill(self) -> None:
-        self._execute("prefill", self.bundle.prefill)
-
-    def on_decode(self, n_active: int) -> None:
-        b = self.bundle.decode_bucket(max(n_active, 1))
-        self._execute(f"decode@{b}", self.bundle.decode[b])
-
     def finish(self) -> None:
         """Return the chip to the governor (auto) clocks."""
         self.controller.reset()
 
-    def _execute(self, name: str, plan) -> None:
+    def _execute(self, name: str, plan: PhasePlan) -> StepEnergy:
         sw0 = getattr(self.controller, "n_switches", 0)
         for entry in plan.schedule.entries:
             self.controller.set_clocks(ClockPair(entry.mem, entry.core))
         self.switches[name] += getattr(self.controller, "n_switches",
                                        sw0) - sw0
         step = self._steps[name]
-        self.meters[name].on_step(step)
+        rec = self.meters[name].on_step(step)
         self.baseline[name].on_step(step)
         self._steps[name] = step + 1
+        return rec
 
     # -- reporting -------------------------------------------------------
     def summary(self) -> Dict:
@@ -97,7 +114,8 @@ class PhaseExecutor:
                 * row["steps"]
             extra = max(row["n_switches"] - internal, 0)
             row["time_s"] += extra * self.chip.switch_latency_s
-            row["energy_j"] += extra * self.chip.switch_latency_s * 100.0
+            row["energy_j"] += extra * self.chip.switch_latency_s \
+                * SWITCH_POWER_W
             if b["energy_j"] > 0:
                 row["time_pct"] = pct(m["time_s"], b["time_s"])
                 row["energy_pct"] = pct(m["energy_j"], b["energy_j"])
@@ -112,3 +130,74 @@ class PhaseExecutor:
             tot["time_pct"] = pct(tot["time_s"], tot["base_time_s"])
             tot["energy_pct"] = pct(tot["energy_j"], tot["base_energy_j"])
         return {"chip": self.chip.name, "phases": phases, "totals": tot}
+
+
+class PhaseExecutor(_BundleExecutor):
+    """Replays a PhasePlanBundle around serve-engine phase transitions."""
+
+    def __init__(self, bundle: PhasePlanBundle, chip: Chip,
+                 controller: Optional[FrequencyController] = None):
+        super().__init__(bundle.phases(), chip, controller,
+                         bundle_chip_name=bundle.chip_name)
+        self.bundle = bundle
+
+    # -- phase hooks -----------------------------------------------------
+    def on_prefill(self) -> None:
+        self._execute("prefill", self.bundle.prefill)
+
+    def on_decode(self, n_active: int) -> None:
+        b = self.bundle.decode_bucket(max(n_active, 1))
+        self._execute(f"decode@{b}", self.bundle.decode[b])
+
+
+class TrainPhaseExecutor(_BundleExecutor):
+    """Replays a TrainPlanBundle around every optimizer step."""
+
+    def __init__(self, bundle: TrainPlanBundle, chip: Chip,
+                 controller: Optional[FrequencyController] = None):
+        super().__init__({n: bundle.phases[n]
+                          for n in bundle.phase_names()}, chip, controller,
+                         bundle_chip_name=bundle.chip_name)
+        self.bundle = bundle
+        self.last_step: Optional[int] = None
+
+    # -- step hook -------------------------------------------------------
+    def on_step(self, step: int) -> StepEnergy:
+        """Execute one train step's fwd -> bwd -> opt phase schedules.
+
+        Returns the step's combined simulated time/energy (switch overhead
+        internal to each phase schedule included; phase-boundary switches
+        are accounted in :meth:`summary`).
+        """
+        t = e = 0.0
+        n_sw = 0
+        for name in self.bundle.phase_names():
+            rec = self._execute(name, self.bundle.phases[name])
+            t += rec.time_s
+            e += rec.energy_j
+            n_sw += rec.n_switches
+        self.last_step = step
+        return StepEnergy(step=step, time_s=t, energy_j=e, n_switches=n_sw)
+
+    # -- checkpoint-resume ----------------------------------------------
+    def state_dict(self) -> Dict:
+        """Accounting state for checkpointing (the records themselves are
+        analytic per-step constants, so counts reconstruct them exactly)."""
+        return {"steps": dict(self._steps),
+                "switches": dict(self.switches),
+                "last_step": self.last_step}
+
+    def load_state_dict(self, state: Dict) -> None:
+        """Resume accounting mid-plan after a checkpoint restart."""
+        self.reset()
+        for name, n in state.get("steps", {}).items():
+            if name not in self.meters:
+                continue
+            for i in range(int(n)):
+                self.meters[name].on_step(i)
+                self.baseline[name].on_step(i)
+            self._steps[name] = int(n)
+        for name, n in state.get("switches", {}).items():
+            if name in self.switches:
+                self.switches[name] = int(n)
+        self.last_step = state.get("last_step")

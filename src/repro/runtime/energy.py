@@ -17,6 +17,7 @@ from typing import Dict, List, Optional, Protocol
 
 import numpy as np
 
+from ..core.coalesce import SWITCH_POWER_W
 from ..core.freq import AUTO, ClockPair
 from ..core.power_model import Chip, KernelSpec
 from ..core.schedule import DVFSSchedule
@@ -115,7 +116,7 @@ class EnergyMeter:
                 t += kt * k.invocations
                 e += ke * k.invocations
         t += n_sw * self.chip.switch_latency_s
-        e += n_sw * self.chip.switch_latency_s * 100.0  # switch power ~100W
+        e += n_sw * self.chip.switch_latency_s * SWITCH_POWER_W
         return t, e, n_sw
 
     def on_step(self, step: int) -> StepEnergy:

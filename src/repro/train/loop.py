@@ -1,10 +1,29 @@
-"""Fault-tolerant training driver.
+"""Fault-tolerant training driver with executed kernel-level DVFS.
 
 Integrates: jitted train step, data pipeline (resumable cursor),
 checkpoint-every-N with atomic save, automatic restart from the latest
 checkpoint on (injected or real) failure, straggler watchdog, and DVFS
-energy metering per step.  This is the loop ``examples/train_gpt3xl_dvfs.py``
+execution per step.  This is the loop ``examples/train_gpt3xl_dvfs.py``
 and the FT tests drive.
+
+DVFS integration comes in two tiers:
+
+* ``energy_meter`` — passive accounting: an
+  :class:`~repro.runtime.energy.EnergyMeter` integrates the analytic
+  time/energy of a fixed schedule each step (no actuation);
+* ``executor`` — active execution: a
+  :class:`~repro.runtime.dvfs_exec.TrainPhaseExecutor` *actuates* the
+  planned clocks around every step, replaying the
+  :class:`~repro.core.phase_plan.TrainPlanBundle`'s ``fwd``/``bwd``/``opt``
+  schedules through a ``FrequencyController`` and metering each phase
+  against its auto-governor twin.
+
+The executor composes with fault tolerance: its accounting state is
+checkpointed alongside model state (``extra["dvfs_exec"]``) and restored
+on restart, so a mid-run failure resumes the plan's energy books instead
+of resetting them; steps re-run after a restart are re-metered, which
+matches the energy the hardware actually spent.  The run report's
+``"dvfs"`` key carries the executor's per-phase summary.
 """
 from __future__ import annotations
 
@@ -18,6 +37,7 @@ import numpy as np
 
 from ..ckpt import CheckpointManager
 from ..data import DataPipeline
+from ..runtime.dvfs_exec import TrainPhaseExecutor
 from ..runtime.energy import EnergyMeter
 from ..runtime.ft import FailureInjector, InjectedFailure, StragglerWatchdog
 from .step import TrainState, init_train_state
@@ -35,6 +55,7 @@ class Trainer:
     def __init__(self, model, train_step: Callable, pipeline: DataPipeline,
                  ckpt: CheckpointManager, cfg: TrainerConfig,
                  energy_meter: Optional[EnergyMeter] = None,
+                 executor: Optional[TrainPhaseExecutor] = None,
                  failure_injector: Optional[FailureInjector] = None,
                  seed: int = 0):
         self.model = model
@@ -43,6 +64,7 @@ class Trainer:
         self.ckpt = ckpt
         self.cfg = cfg
         self.meter = energy_meter
+        self.executor = executor
         self.injector = failure_injector
         self.watchdog = StragglerWatchdog()
         self.seed = seed
@@ -56,17 +78,31 @@ class Trainer:
     def _restore_or_init(self) -> (Any, int):
         step = self.ckpt.latest_step()
         if step is None:
+            if self.executor is not None:
+                # no checkpoint to resume: drop any books from an aborted
+                # attempt so re-run steps are not double-counted
+                self.executor.reset()
             return self._fresh_state(), 0
         template = jax.tree.map(np.asarray, self._fresh_state())
         state, index = self.ckpt.restore(template)
         extra = index.get("extra", {})
         if "pipeline" in extra:
             self.pipeline.load_state_dict(extra["pipeline"])
+        if self.executor is not None:
+            if "dvfs_exec" in extra:
+                # resume the plan's energy books mid-run (FT drill)
+                self.executor.load_state_dict(extra["dvfs_exec"])
+            else:
+                # checkpoint predates the executor: start its books at
+                # the restored step rather than keeping stale records
+                self.executor.reset()
         return state, int(index["step"])
 
     def _save(self, step: int, state: TrainState):
-        self.ckpt.save(step, state,
-                       extra={"pipeline": self.pipeline.state_dict()})
+        extra = {"pipeline": self.pipeline.state_dict()}
+        if self.executor is not None:
+            extra["dvfs_exec"] = self.executor.state_dict()
+        self.ckpt.save(step, state, extra=extra)
 
     # ------------------------------------------------------------------
     def run(self) -> Dict:
@@ -100,6 +136,10 @@ class Trainer:
                 e = self.meter.on_step(step)
                 rec.update({"sim_time_s": e.time_s,
                             "sim_energy_j": e.energy_j})
+            if self.executor is not None:
+                e = self.executor.on_step(step)
+                rec.update({"dvfs_time_s": e.time_s,
+                            "dvfs_energy_j": e.energy_j})
             self.history.append(rec)
             next_step = step + 1
             if next_step % self.cfg.ckpt_every == 0 \
@@ -112,4 +152,7 @@ class Trainer:
                "straggler_events": len(self.watchdog.events)}
         if self.meter is not None:
             out["energy"] = self.meter.totals()
+        if self.executor is not None:
+            self.executor.finish()
+            out["dvfs"] = self.executor.summary()
         return out

