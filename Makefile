@@ -8,7 +8,7 @@
 
 PYTEST = PYTHONPATH=src python -m pytest -q
 
-.PHONY: test test-fast bench docs-check
+.PHONY: test test-fast bench bench-smoke docs-check
 
 test:
 	$(PYTEST)
@@ -18,6 +18,11 @@ test-fast: docs-check
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+
+# Toy-scale serve-throughput gate: fails on a >10% tokens/sec regression
+# against the checked-in BENCH_serve.json perf anchor.
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.serve_continuous --smoke --check
 
 # Verify every command fenced in docs/*.md against the benchmark
 # registry and every [[artifact]] reference against the working tree.

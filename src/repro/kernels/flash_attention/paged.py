@@ -1,0 +1,133 @@
+"""Pallas TPU paged-attention decode kernel (block-table KV read path).
+
+Decode attention where the KV cache lives in a shared *page pool*
+``(n_pages, page_size, KV, D)`` instead of a dense per-slot
+``(n_slots, max_seq, KV, D)`` buffer.  Each batch row (slot) owns an
+ordered row of a block table: entry ``j`` names the page holding absolute
+positions ``[j*page_size, (j+1)*page_size)`` of that slot's sequence.
+
+The block table and the per-slot decode positions ride in as
+*scalar-prefetch* operands (``pltpu.PrefetchScalarGridSpec``), so the
+page index feeds the K/V BlockSpec index maps directly: the pages are
+DMA'd HBM->VMEM exactly like contiguous KV blocks — gather by DMA
+descriptor, never materialized as a contiguous copy (the pure-jnp
+reference in ``ref.py`` pays that copy; the kernel does not).
+
+Grid: ``(B, KV_heads, n_blocks)`` with the block axis innermost and
+sequential, carrying online-softmax state (m, l, acc) in VMEM scratch
+across block iterations — the same recipe as ``kernel.py``'s flash
+forward.  Unallocated table entries must point at a *valid* page index
+(the pool uses page 0); their keys land beyond ``pos`` and are masked.
+
+Tiling note: the per-program MXU shapes are (G x D) @ (D x page) — small
+for GQA groups; correctness-first (validated in interpret mode on CPU via
+``tests``), production tiling would fold slots into the sublane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         page_size: int, window: int, softcap: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, page)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    pos = pos_ref[b]
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                            # (G, page)
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= k_pos > (pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.exp(jnp.where(m_prev <= NEG_INF, NEG_INF, m_prev - m_safe))
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pages, v_pages, block_tables, pos, *,
+                       window: int = 0, softcap: float = 0.0,
+                       interpret: bool = False):
+    """Single-token paged attention.
+
+    q: (B, 1, H, D); k_pages, v_pages: (P, page, KV, D) page pools;
+    block_tables: (B, nb) int32 page ids (unallocated entries must hold a
+    valid page id — they are masked by position); pos: (B,) absolute
+    position of the incoming token (cache entries > pos are invalid).
+    Returns (B, 1, H, D).
+    """
+    B, _, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    G = H // KV
+    nb = block_tables.shape[1]
+    qr = q.reshape(B, KV, G, D)
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, page_size=page, window=window,
+        softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, tbl, ps: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, tbl, ps: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, tbl, ps: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, tbl, ps: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running sum
+            pltpu.VMEM((G, D), jnp.float32),    # accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(pos, jnp.int32),
+      qr, k_pages, v_pages)
+    return out.reshape(B, 1, H, D)

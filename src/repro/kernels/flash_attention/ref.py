@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracles for the flash-attention kernels (dense and paged)."""
 from __future__ import annotations
 
 import jax
@@ -31,3 +31,32 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     p = jnp.where(valid[None], p, 0.0)
     o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
+                        window: int = 0, softcap: float = 0.0):
+    """Gather-based oracle for the paged decode kernel.
+
+    q: (B, 1, H, D); k_pages, v_pages: (P, page, KV, D);
+    block_tables: (B, nb) page ids; pos: (B,).  Materializes each slot's
+    gathered KV ``(B, nb*page, KV, D)`` — the contiguous copy the Pallas
+    kernel's DMA-descriptor gather avoids.  Returns (B, 1, H, D).
+    """
+    B, _, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    G = H // KV
+    nb = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, nb * page, KV, D)
+    v = v_pages[block_tables].reshape(B, nb * page, KV, D)
+    qr = q.reshape(B, KV, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = jnp.arange(nb * page)[None, :]                # (1, S)
+    valid = k_pos <= pos[:, None]
+    if window > 0:
+        valid &= k_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

@@ -158,19 +158,28 @@ class EncDecLM:
                             self._cache_struct(B, max_seq))
 
     def prefill(self, params, tokens, frames=None, max_seq=None,
-                remat: bool = True):
-        """Encode frames, run decoder over prompt tokens, build caches."""
+                remat: bool = True, prompt_lens=None):
+        """Encode frames, run decoder over prompt tokens, build caches.
+
+        ``prompt_lens`` (B,) supports right-padded batched prefill: padded
+        self-attention keys are masked and the logits are gathered at each
+        row's last valid position (cross-attention is per-query, so padded
+        rows only corrupt their own unused outputs).
+        """
         cfg = self.cfg
         memory = self.encode(params, frames, remat=remat)
         x = cm.embed_tokens(params["embed"], tokens, self.compute_dtype)
         B, S = x.shape[0], x.shape[1]
         max_seq = max_seq or S
+        lens = None if prompt_lens is None \
+            else jnp.asarray(prompt_lens, jnp.int32)
 
         def body(x, lp):
             h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
             h, (k, v) = cm.attention_block(
                 lp["attn"], h, cfg_theta=0.0, positional="learned",
-                causal=True, block_k=self.block_k, return_kv=True)
+                causal=True, block_k=self.block_k, return_kv=True,
+                kv_valid_len=lens)
             x = x + h
             h = cm.apply_norm(lp["norm_cross"], x, cfg.norm)
             h, (ck, cv) = cm.attention_block(
@@ -190,13 +199,20 @@ class EncDecLM:
         if remat:
             body = jax.checkpoint(body, prevent_cse=False)
         x, cache = lax.scan(body, x, params["dec_layers"])
-        x = cm.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        last = x[:, -1:] if lens is None \
+            else cm.gather_last_positions(x, lens)
+        x = cm.apply_norm(params["final_norm"], last, cfg.norm)
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
     def cache_slot_axes(self):
         """Batch-axis index per cache leaf (for slot-wise admission)."""
         return {"k": 1, "v": 1, "cross_k": 1, "cross_v": 1}
+
+    def paged_cache_keys(self):
+        """Self-attention KV grows with max_seq -> paged; cross K/V is a
+        fixed F-length block per slot -> dense."""
+        return ["k", "v"]
 
     def cache_max_seq(self, cache) -> int:
         return cache["k"].shape[2]
@@ -210,7 +226,7 @@ class EncDecLM:
         return logits, cm.write_cache_slot(cache, sub, slot,
                                            self.cache_slot_axes())
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, block_tables=None):
         cfg = self.cfg
         B = tokens.shape[0]
         x = (jnp.take(params["embed"]["wte"], tokens[:, None], axis=0)
@@ -227,9 +243,17 @@ class EncDecLM:
                            cm.cast(lp["attn"]["wk"], h.dtype))
             v = jnp.einsum("bsd,dhk->bshk", h,
                            cm.cast(lp["attn"]["wv"], h.dtype))
-            kc = c["k"].at[ar, pos].set(k[:, 0])
-            vc = c["v"].at[ar, pos].set(v[:, 0])
-            o = cm.decode_attention(q, kc, vc, pos=pos)
+            if block_tables is not None:
+                kc = cm.paged_cache_write(c["k"], k[:, 0], block_tables,
+                                          pos)
+                vc = cm.paged_cache_write(c["v"], v[:, 0], block_tables,
+                                          pos)
+                o = cm.paged_decode_attention(q, kc, vc, block_tables,
+                                              pos=pos)
+            else:
+                kc = c["k"].at[ar, pos].set(k[:, 0])
+                vc = c["v"].at[ar, pos].set(v[:, 0])
+                o = cm.decode_attention(q, kc, vc, pos=pos)
             x = x + jnp.einsum("bshk,hkd->bsd", o,
                                cm.cast(lp["attn"]["wo"], h.dtype))
             h = cm.apply_norm(lp["norm_cross"], x, cfg.norm)

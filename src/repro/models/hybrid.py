@@ -86,13 +86,15 @@ class HybridLM:
         return self._build(ParamBuilder.AXES)
 
     # -- shared attention block (full-sequence) -----------------------------
-    def _shared_fwd(self, sp: Params, h, emb, return_kv=False):
+    def _shared_fwd(self, sp: Params, h, emb, return_kv=False,
+                    kv_valid_len=None):
         cfg = self.cfg
         u = jnp.concatenate([h, emb], axis=-1)
         un = cm.apply_norm(sp["norm_attn"], u, "rms")
         res = cm.attention_block(
             sp["attn"], un, cfg_theta=cfg.rope_theta, positional="rope",
-            causal=True, block_k=self.block_k, return_kv=return_kv)
+            causal=True, block_k=self.block_k, return_kv=return_kv,
+            kv_valid_len=kv_valid_len)
         if return_kv:
             attn_out, kv = res
         else:
@@ -107,7 +109,8 @@ class HybridLM:
                                                       un.dtype))
         return (h, kv) if return_kv else h
 
-    def _shared_decode(self, sp: Params, h, emb, kc, vc, pos):
+    def _shared_decode(self, sp: Params, h, emb, kc, vc, pos,
+                       block_tables=None):
         cfg = self.cfg
         B = h.shape[0]
         u = jnp.concatenate([h, emb], axis=-1)
@@ -120,10 +123,15 @@ class HybridLM:
                                                     un.dtype))
         q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
         k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
-        ar = jnp.arange(B)
-        kc = kc.at[ar, pos].set(k[:, 0])
-        vc = vc.at[ar, pos].set(v[:, 0])
-        o = cm.decode_attention(q, kc, vc, pos=pos)
+        if block_tables is not None:
+            kc = cm.paged_cache_write(kc, k[:, 0], block_tables, pos)
+            vc = cm.paged_cache_write(vc, v[:, 0], block_tables, pos)
+            o = cm.paged_decode_attention(q, kc, vc, block_tables, pos=pos)
+        else:
+            ar = jnp.arange(B)
+            kc = kc.at[ar, pos].set(k[:, 0])
+            vc = vc.at[ar, pos].set(v[:, 0])
+            o = cm.decode_attention(q, kc, vc, pos=pos)
         h = h + jnp.einsum("bshk,hkd->bsd", o, cm.cast(sp["attn"]["wo"],
                                                        un.dtype))
         u = jnp.concatenate([h, emb], axis=-1)
@@ -197,12 +205,15 @@ class HybridLM:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self._cache_struct(B, max_seq))
 
-    def prefill(self, params, tokens, max_seq=None, remat: bool = True):
+    def prefill(self, params, tokens, max_seq=None, remat: bool = True,
+                prompt_lens=None):
         cfg = self.cfg
         per = cfg.attn_every
         x = cm.embed_tokens(params["embed"], tokens, self.compute_dtype)
         B, S = x.shape[0], x.shape[1]
         max_seq = max_seq or S
+        lens = None if prompt_lens is None \
+            else jnp.asarray(prompt_lens, jnp.int32)
         emb = x
         shared = params["shared"]
         n_scan = self.n_groups * per
@@ -215,13 +226,15 @@ class HybridLM:
             return lax.dynamic_update_slice(kpad, k, (0, 0, 0, 0))
 
         def group_body(x, gp):
-            x, (k, v) = self._shared_fwd(shared, x, emb, return_kv=True)
+            x, (k, v) = self._shared_fwd(shared, x, emb, return_kv=True,
+                                         kv_valid_len=lens)
             cache = {"k": pad_kv(k), "v": pad_kv(v), "ssm": [], "conv": []}
             for i in range(per):
                 lp = jax.tree.map(lambda a, i=i: a[i], gp)
                 h = cm.apply_norm(lp["norm"], x, cfg.norm)
                 out, (hf, tail) = mamba_block(lp["mamba"], h, cfg,
-                                              return_state=True)
+                                              return_state=True,
+                                              seq_lens=lens)
                 x = x + out
                 cache["ssm"].append(hf)
                 cache["conv"].append(tail)
@@ -238,7 +251,8 @@ class HybridLM:
                                                cache["conv"].shape[2:]),
                  "k": cache["k"], "v": cache["v"]}
         if self.tail:
-            x, (k, v) = self._shared_fwd(shared, x, emb, return_kv=True)
+            x, (k, v) = self._shared_fwd(shared, x, emb, return_kv=True,
+                                         kv_valid_len=lens)
             cache["k"] = jnp.concatenate([cache["k"], pad_kv(k)[None]])
             cache["v"] = jnp.concatenate([cache["v"], pad_kv(v)[None]])
             ssm_t, conv_t = [], []
@@ -246,20 +260,28 @@ class HybridLM:
                 lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
                 h = cm.apply_norm(lp["norm"], x, cfg.norm)
                 out, (hf, tail) = mamba_block(lp["mamba"], h, cfg,
-                                              return_state=True)
+                                              return_state=True,
+                                              seq_lens=lens)
                 x = x + out
                 ssm_t.append(hf)
                 conv_t.append(tail)
             cache["ssm"] = jnp.concatenate([cache["ssm"], jnp.stack(ssm_t)])
             cache["conv"] = jnp.concatenate([cache["conv"],
                                              jnp.stack(conv_t)])
-        x = cm.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        last = x[:, -1:] if lens is None \
+            else cm.gather_last_positions(x, lens)
+        x = cm.apply_norm(params["final_norm"], last, cfg.norm)
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
     def cache_slot_axes(self):
         """Batch-axis index per cache leaf (for slot-wise admission)."""
         return {"ssm": 1, "conv": 1, "k": 1, "v": 1}
+
+    def paged_cache_keys(self):
+        """Shared-attention KV grows with max_seq -> paged; SSM/conv state
+        is constant-size per slot -> dense."""
+        return ["k", "v"]
 
     def cache_max_seq(self, cache) -> int:
         return cache["k"].shape[2]
@@ -273,7 +295,7 @@ class HybridLM:
         return logits, cm.write_cache_slot(cache, sub, slot,
                                            self.cache_slot_axes())
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, block_tables=None):
         cfg = self.cfg
         per = cfg.attn_every
         x = cm.embed_tokens(params["embed"], tokens[:, None],
@@ -296,7 +318,8 @@ class HybridLM:
         def group_body(x, inp):
             gp, gc = inp
             x, kc, vc = self._shared_decode(shared, x, emb, gc["k"],
-                                            gc["v"], pos)
+                                            gc["v"], pos,
+                                            block_tables=block_tables)
             new = {"k": kc, "v": vc, "ssm": [], "conv": []}
             for i in range(per):
                 lp = jax.tree.map(lambda a, i=i: a[i], gp)
@@ -321,7 +344,8 @@ class HybridLM:
         if self.tail:
             x, kc, vc = self._shared_decode(shared, x, emb,
                                             cache["k"][self.n_groups],
-                                            cache["v"][self.n_groups], pos)
+                                            cache["v"][self.n_groups], pos,
+                                            block_tables=block_tables)
             out_cache["k"] = jnp.concatenate([out_cache["k"], kc[None]])
             out_cache["v"] = jnp.concatenate([out_cache["v"], vc[None]])
             ssm_t, conv_t = [], []

@@ -173,8 +173,16 @@ def init_mamba_block(b: ParamBuilder, cfg: ModelConfig) -> Params:
 
 
 def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                h0=None, return_state: bool = False):
-    """Full-sequence Mamba2 block. x: (B,S,d)."""
+                h0=None, return_state: bool = False,
+                seq_lens: Optional[jnp.ndarray] = None):
+    """Full-sequence Mamba2 block. x: (B,S,d).
+
+    ``seq_lens`` (B,) marks per-row valid lengths for right-padded batched
+    prefill: padded positions get ``dt = 0``, making the SSD recurrence an
+    identity there (``exp(0)·h + B·(x·0) = h``), so the final state equals
+    the state at each row's true length; the conv tail is gathered from
+    the last valid positions instead of the padded end.
+    """
     s = cfg.ssm
     B_, S, d = x.shape
     d_in = s.expand * d
@@ -191,6 +199,11 @@ def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     Bm, Cm = jnp.split(bc_c, [gn], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32) + _DT_BIAS)
+    if seq_lens is not None:
+        # padded positions: dt=0 -> log-decay 0 and zero input update,
+        # i.e. the recurrence is the identity past each row's length
+        seq_mask = jnp.arange(S)[None, :] < seq_lens[:, None]
+        dt = dt * seq_mask[..., None]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (nh,)
     a = dt * A                                         # (B,S,nh) log decay
     xh = xs.reshape(B_, S, nh, s.head_dim)
@@ -203,10 +216,16 @@ def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     y = cm.apply_norm(p["gate_norm"], y * jax.nn.silu(z), "rms")
     out = jnp.einsum("bsi,id->bsd", y, cm.cast(p["out_proj"], x.dtype))
     if return_state:
-        # conv tail: last (W-1) post-activation *inputs* of the conv
-        tail = conv_in[:, -(s.conv_width - 1):]
-        if S < s.conv_width - 1:
-            tail = jnp.pad(tail, ((0, 0), (s.conv_width - 1 - S, 0), (0, 0)))
+        # conv tail: last (W-1) post-activation *inputs* of the conv,
+        # taken at each row's true end when lengths are ragged
+        if seq_lens is not None:
+            tail = cm.gather_tail_window(conv_in, seq_lens,
+                                         s.conv_width - 1)
+        else:
+            tail = conv_in[:, -(s.conv_width - 1):]
+            if S < s.conv_width - 1:
+                tail = jnp.pad(tail,
+                               ((0, 0), (s.conv_width - 1 - S, 0), (0, 0)))
         return out, (h_final, tail)
     return out
 
@@ -335,26 +354,35 @@ class MambaLM:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self._cache_struct(B, max_seq))
 
-    def prefill(self, params, tokens, max_seq=None, remat: bool = True):
+    def prefill(self, params, tokens, max_seq=None, remat: bool = True,
+                prompt_lens=None):
         cfg = self.cfg
         x = cm.embed_tokens(params["embed"], tokens, self.compute_dtype)
+        lens = None if prompt_lens is None \
+            else jnp.asarray(prompt_lens, jnp.int32)
 
         def body(x, lp):
             h = cm.apply_norm(lp["norm"], x, cfg.norm)
             out, (hf, tail) = mamba_block(lp["mamba"], h, cfg,
-                                          return_state=True)
+                                          return_state=True, seq_lens=lens)
             return x + out, {"ssm": hf, "conv": tail}
 
         if remat:
             body = jax.checkpoint(body, prevent_cse=False)
         x, cache = lax.scan(body, x, params["layers"])
-        x = cm.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        last = x[:, -1:] if lens is None \
+            else cm.gather_last_positions(x, lens)
+        x = cm.apply_norm(params["final_norm"], last, cfg.norm)
         logits = cm.unembed(params["embed"], x)
         return logits[:, 0], cache
 
     def cache_slot_axes(self):
         """Batch-axis index per cache leaf (for slot-wise admission)."""
         return {"ssm": 1, "conv": 1}
+
+    def paged_cache_keys(self):
+        """Constant-size recurrent state: nothing to page."""
+        return []
 
     def cache_max_seq(self, cache) -> int:
         return 0    # constant-size state; no sequence capacity
@@ -366,7 +394,8 @@ class MambaLM:
         return logits, cm.write_cache_slot(cache, sub, slot,
                                            self.cache_slot_axes())
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, block_tables=None):
+        # block_tables accepted for API uniformity; no paged leaves here
         cfg = self.cfg
         x = cm.embed_tokens(params["embed"], tokens[:, None],
                             self.compute_dtype)

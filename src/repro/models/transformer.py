@@ -237,13 +237,25 @@ class DecoderLM:
 
     def prefill(self, params: Params, tokens: jnp.ndarray,
                 patch_embeds=None, max_seq: Optional[int] = None,
-                remat: bool = True):
-        """Process a prompt; return (last-position logits, filled cache)."""
+                remat: bool = True,
+                prompt_lens: Optional[jnp.ndarray] = None):
+        """Process a prompt; return (last-position logits, filled cache).
+
+        ``prompt_lens`` (B,) enables *batched bucketed* prefill: rows are
+        right-padded to a shared bucket length; attention masks padded key
+        positions, ring windows gather per-row valid tails, and the logits
+        are taken at each row's last valid position.  Padded cache
+        positions hold garbage, which decode masks by position.
+        """
         cfg = self.cfg
         x = self._embed_input(params, tokens, patch_embeds)
         B, S = x.shape[0], x.shape[1]
         max_seq = max_seq or S
         cache = self.init_cache(B, max_seq)
+        valid_len = None
+        if prompt_lens is not None:
+            P = 0 if patch_embeds is None else patch_embeds.shape[1]
+            valid_len = jnp.asarray(prompt_lens, jnp.int32) + P
         glayers = jax.tree.map(
             lambda a: a.reshape((self.n_groups, self.group) + a.shape[1:]),
             params["layers"])
@@ -258,7 +270,7 @@ class DecoderLM:
                     lp["attn"], h, cfg_theta=cfg.rope_theta,
                     positional=cfg.positional, causal=True, window=window,
                     softcap=cfg.attn_logit_softcap, block_k=self.block_k,
-                    return_kv=True)
+                    return_kv=True, kv_valid_len=valid_len)
                 x = x + h
                 h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
                 if cfg.is_moe:
@@ -280,17 +292,11 @@ class DecoderLM:
                 else:
                     W = min(cfg.attn_window, max_seq)
                     if window:  # local layer: keep last W, ring-indexed
-                        kw, vw = k[:, -W:], v[:, -W:]
-                        if S < W:
-                            kw = jnp.pad(kw, ((0, 0), (0, W - S),
-                                              (0, 0), (0, 0)))
-                            vw = jnp.pad(vw, ((0, 0), (0, W - S),
-                                              (0, 0), (0, 0)))
-                        else:
-                            # roll so that slot (p % W) holds position p
-                            shift = S % W
-                            kw = jnp.roll(kw, shift, axis=1)
-                            vw = jnp.roll(vw, shift, axis=1)
+                        # slot (p % W) holds position p, per-row valid tail
+                        lens = valid_len if valid_len is not None \
+                            else jnp.full((B,), S, jnp.int32)
+                        kw = cm.gather_ring_window(k, lens, W)
+                        vw = cm.gather_ring_window(v, lens, W)
                         new_cache.setdefault("k_local", []).append(kw)
                         new_cache.setdefault("v_local", []).append(vw)
                     else:
@@ -307,7 +313,9 @@ class DecoderLM:
         if remat:
             group_body = jax.checkpoint(group_body, prevent_cse=False)
         x, cache = lax.scan(group_body, x, glayers)
-        logits = self.logits(params, x[:, -1:])
+        last = x[:, -1:] if valid_len is None \
+            else cm.gather_last_positions(x, valid_len)
+        logits = self.logits(params, last)
         return logits[:, 0], cache
 
     def cache_slot_axes(self):
@@ -332,9 +340,20 @@ class DecoderLM:
         return logits, cm.write_cache_slot(cache, sub, slot,
                                            self.cache_slot_axes())
 
+    def paged_cache_keys(self):
+        """Cache leaves holding unbounded (max_seq) KV, eligible for the
+        block-table page pool; local ring buffers stay dense (bounded W)."""
+        return ["k", "v"] if self.group == 1 else ["k_global", "v_global"]
+
     def decode_step(self, params: Params, cache, tokens: jnp.ndarray,
-                    pos: jnp.ndarray):
-        """One decode step. tokens: (B,) int32; pos: (B,) absolute position."""
+                    pos: jnp.ndarray, block_tables=None):
+        """One decode step. tokens: (B,) int32; pos: (B,) absolute position.
+
+        With ``block_tables`` (B, nb), the leaves named by
+        :meth:`paged_cache_keys` are page pools (P, page, KV, D) shared by
+        all slots; reads go through the paged-attention path and writes
+        scatter one token into the slot's current page.
+        """
         cfg = self.cfg
         B = tokens.shape[0]
         x = cm.embed_tokens(params["embed"], tokens[:, None],
@@ -349,6 +368,7 @@ class DecoderLM:
         arangeB = jnp.arange(B)
 
         def one_attn(lp, x, kc, vc, window, ring: bool):
+            paged = block_tables is not None and not ring
             h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
             q = jnp.einsum("bsd,dhk->bshk", h, cm.cast(lp["attn"]["wq"],
                                                        h.dtype))
@@ -359,17 +379,23 @@ class DecoderLM:
             if cfg.positional == "rope":
                 q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
                 k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
-            slot = pos % kc.shape[1] if ring else pos
-            kc = kc.at[arangeB, slot].set(k[:, 0])
-            vc = vc.at[arangeB, slot].set(v[:, 0])
-            if ring:
-                W = kc.shape[1]
-                s = jnp.arange(W)[None, :]
-                abs_pos = pos[:, None] - ((pos[:, None] - s) % W)
-                o = self._ring_attention(q, kc, vc, abs_pos, pos)
+            if paged:
+                kc = cm.paged_cache_write(kc, k[:, 0], block_tables, pos)
+                vc = cm.paged_cache_write(vc, v[:, 0], block_tables, pos)
+                o = cm.paged_decode_attention(q, kc, vc, block_tables,
+                                              pos=pos, window=window)
             else:
-                o = cm.decode_attention(q, kc, vc, pos=pos,
-                                        window=window)
+                slot = pos % kc.shape[1] if ring else pos
+                kc = kc.at[arangeB, slot].set(k[:, 0])
+                vc = vc.at[arangeB, slot].set(v[:, 0])
+                if ring:
+                    W = kc.shape[1]
+                    s = jnp.arange(W)[None, :]
+                    abs_pos = pos[:, None] - ((pos[:, None] - s) % W)
+                    o = self._ring_attention(q, kc, vc, abs_pos, pos)
+                else:
+                    o = cm.decode_attention(q, kc, vc, pos=pos,
+                                            window=window)
             o = jnp.einsum("bshk,hkd->bsd", o, cm.cast(lp["attn"]["wo"],
                                                        h.dtype))
             x = x + o

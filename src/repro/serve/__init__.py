@@ -1,7 +1,8 @@
 from .engine import ServeEngine, Request, sample_token
 from .scheduler import Scheduler
 from .batch_state import BatchState
+from .kv_pages import PagePool, PagedBatchState
 from .wave import WaveEngine
 
 __all__ = ["ServeEngine", "Request", "sample_token", "Scheduler",
-           "BatchState", "WaveEngine"]
+           "BatchState", "PagePool", "PagedBatchState", "WaveEngine"]

@@ -2,12 +2,22 @@
 
 ``BatchState`` owns the pooled KV/state cache (one batch row per slot, for
 any architecture family — the model's ``cache_slot_axes()`` names where the
-batch dim sits in each leaf), the per-slot decode positions, and the last
-sampled token per slot.  Which slot holds which request is the
-:class:`~repro.serve.scheduler.Scheduler`'s single source of truth.
-Admission writes a freshly prefilled single-sequence cache into one slot
-(:func:`~repro.models.common.write_cache_slot`) without touching the other
-rows, so decode never drains.
+batch dim sits in each leaf) plus three (n_slots,) device vectors that ride
+the jitted hot path:
+
+* ``tokens``    — last sampled token per slot,
+* ``pos``       — its absolute position,
+* ``remaining`` — generation budget left; ``remaining > 0`` is the
+  on-device "live" mask that lets the decode scan terminate per slot
+  (EOS / max-len) without a host round-trip.
+
+Which slot holds which request is the
+:class:`~repro.serve.scheduler.Scheduler`'s single source of truth.  All
+slot mutation happens *inside* the engine's jitted admission and decode
+calls — the eager per-slot ``.at[].set`` scatters that used to run on the
+host (one dispatch per admission/retire, half the old engine's wall
+clock) are gone; a retired slot simply keeps ``remaining == 0`` and its
+rows freeze in place until the next admission overwrites them.
 """
 from __future__ import annotations
 
@@ -23,16 +33,9 @@ class BatchState:
         self.cache = model.init_cache(n_slots, max_seq)
         self.tokens = jnp.zeros((n_slots,), jnp.int32)   # last sampled
         self.pos = jnp.zeros((n_slots,), jnp.int32)      # its position
+        self.remaining = jnp.zeros((n_slots,), jnp.int32)
 
-    def activate(self, slot: int, first_token: int, pos: int) -> None:
-        """Arm a slot after admission: ``first_token`` (the prefill
-        sample) will be fed to the decode loop at absolute ``pos``."""
-        self.tokens = self.tokens.at[slot].set(first_token)
-        self.pos = self.pos.at[slot].set(pos)
-
-    def retire(self, slot: int) -> None:
-        """Park a freed slot; its cache row is garbage until re-admission
-        overwrites it (every per-row op is batch-independent, so stale rows
-        cannot perturb live ones)."""
-        self.tokens = self.tokens.at[slot].set(0)
-        self.pos = self.pos.at[slot].set(0)
+    def kv_hbm_bytes(self) -> int:
+        import jax
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.cache))

@@ -1,0 +1,176 @@
+"""Paged KV block pool: block-table-indexed cache memory for serving.
+
+Replaces the dense per-slot ``(n_slots, max_seq)`` KV layout with a shared
+pool of fixed-size pages plus a per-slot *block table* — the vLLM
+PagedAttention memory model.  Dense slots must each reserve ``max_seq``
+positions; pages are reserved per *request* at admission
+(``ceil((prompt + max_new) / page_size)``), so a pool sized for the mean
+request length serves ≥2× the slot count at the same HBM.
+
+Three pieces:
+
+* :class:`PagePool` — host-side allocator: free-list + per-slot block
+  tables.  Allocation is whole-request (no mid-decode growth), so the
+  decode hot path never takes an allocator sync; a request that does not
+  fit defers in the admission queue (backpressure) until pages free.
+* :class:`PagedBatchState` — the engine-facing device state: the model's
+  cache tree with the leaves named by ``model.paged_cache_keys()``
+  re-laid-out as ``(..., n_pages, page_size, KV, D)`` pools, everything
+  else (SSM state, conv windows, ring buffers, cross-attention K/V) kept
+  dense per slot.  Owns the device mirror of the block tables.
+* :func:`write_prefill_pages` — scatter a freshly prefilled sub-cache
+  (right-padded to a page multiple) into the pages of each admitted
+  slot's table row.
+
+Page 0 is the reserved **parking page**: it is never allocated, and every
+unallocated (or freed) block-table entry points at it.  This serves two
+purposes.  First, the Pallas page-read kernel's DMA index map always sees
+a valid page (reads of it lie beyond every slot's ``pos`` and are masked
+by the attention validity rule).  Second, a *frozen* slot — one whose
+request finished on device (``remaining == 0``) but whose row still rides
+the decode scan — keeps re-writing its parked token's K/V through its
+block table; once its pages are freed (and possibly re-allocated to a new
+request), that write must land somewhere harmless.  Parking absorbs it:
+freed rows point at page 0, which no live request ever reads.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePool:
+    """Host-side page allocator with per-slot block tables."""
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_blocks: int):
+        if n_pages < 2 or page_size < 1:
+            raise ValueError(f"bad pool geometry ({n_pages=}, {page_size=});"
+                             f" need >= 2 pages (page 0 is parking)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_blocks = max_blocks
+        # LIFO free list: freed pages are reused first (warm in cache);
+        # page 0 is the reserved parking page and is never handed out
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        # unallocated entries hold the parking page
+        self.tables = np.zeros((n_slots, max_blocks), np.int32)
+        self.n_blocks = np.zeros(n_slots, np.int32)     # allocated per slot
+        self.used_tokens = np.zeros(n_slots, np.int64)  # capacity actually
+        #                                               # needed (frag stat)
+
+    # -- allocator --------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def allocate(self, slot: int, n_tokens: int) -> bool:
+        """Reserve pages covering ``n_tokens`` positions for ``slot``.
+
+        Returns False (allocating nothing) when the pool cannot cover the
+        request — the caller defers admission.  A slot must be freed
+        before it can be re-allocated.
+        """
+        if self.n_blocks[slot]:
+            raise ValueError(f"slot {slot} already holds pages")
+        need = max(-(-int(n_tokens) // self.page_size), 1)
+        if need > self.max_blocks:
+            raise ValueError(f"request needs {need} blocks > table width "
+                             f"{self.max_blocks}")
+        if need > len(self._free):
+            return False
+        pages = [self._free.pop() for _ in range(need)]
+        self.tables[slot, :need] = pages
+        self.tables[slot, need:] = 0
+        self.n_blocks[slot] = need
+        self.used_tokens[slot] = int(n_tokens)
+        return True
+
+    def free(self, slot: int) -> None:
+        """Return a slot's pages to the free list."""
+        n = int(self.n_blocks[slot])
+        if n == 0:
+            raise ValueError(f"slot {slot} holds no pages")
+        self._free.extend(int(p) for p in self.tables[slot, :n])
+        self.tables[slot, :] = 0
+        self.n_blocks[slot] = 0
+        self.used_tokens[slot] = 0
+
+    # -- accounting -------------------------------------------------------
+    def stats(self) -> Dict:
+        """Occupancy + internal fragmentation (allocated-but-unneeded
+        token capacity; pages are fixed-size, so there is no external
+        fragmentation by construction)."""
+        allocated = int(self.n_blocks.sum())
+        cap = allocated * self.page_size
+        used = int(self.used_tokens.sum())
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "allocated_pages": allocated, "free_pages": self.n_free,
+                "used_tokens": used,
+                "internal_frag_tokens": cap - used,
+                "internal_frag_frac": (cap - used) / cap if cap else 0.0}
+
+
+class PagedBatchState:
+    """Device-side state of the slot pool with paged KV leaves.
+
+    Duck-types :class:`~repro.serve.batch_state.BatchState` for the engine
+    (``cache`` / ``tokens`` / ``pos`` / ``remaining``), adding the page
+    pool, the block tables' device mirror, and HBM accounting.
+    """
+
+    def __init__(self, model, n_slots: int, max_seq: int,
+                 page_size: int = 16, n_pages: Optional[int] = None):
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.paged_keys = list(model.paged_cache_keys())
+        max_blocks = max(-(-max_seq // page_size), 1)
+        if n_pages is None:
+            # default: same usable token capacity as the dense layout
+            # (+1 for the reserved parking page)
+            n_pages = n_slots * max_blocks + 1
+        self.pool = PagePool(n_pages, page_size, n_slots, max_blocks)
+
+        dense = model._cache_struct(n_slots, max_seq)
+        cache = {}
+        for key, s in dense.items():
+            if key in self.paged_keys:
+                # (..., n_slots@1, max_seq@2, KV, D)
+                #   -> (..., n_pages@1, page_size@2, KV, D)
+                shape = (s.shape[0], n_pages, page_size) + s.shape[3:]
+                cache[key] = jnp.zeros(shape, s.dtype)
+            else:
+                cache[key] = jnp.zeros(s.shape, s.dtype)
+        self.cache = cache
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.remaining = jnp.zeros((n_slots,), jnp.int32)
+        self.tables_dev = jnp.asarray(self.pool.tables)
+
+    def sync_tables(self) -> None:
+        """Refresh the device mirror after host-side (de)allocations."""
+        self.tables_dev = jnp.asarray(self.pool.tables)
+
+    def kv_hbm_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize for a in self.cache.values())
+
+
+def write_prefill_pages(pool_leaf: jnp.ndarray, sub_leaf: jnp.ndarray,
+                        tables_sub: jnp.ndarray) -> jnp.ndarray:
+    """Scatter an admitted batch's prefilled KV into its pages.
+
+    pool_leaf: (L, P, page, KV, D); sub_leaf: (L, N, S, KV, D) with S a
+    multiple of page; tables_sub: (N, S//page) page ids per admitted row.
+    Rows of dummy admissions carry out-of-range ids and are dropped.
+    """
+    L, N, S = sub_leaf.shape[:3]
+    page = pool_leaf.shape[2]
+    nb = S // page
+    blocks = sub_leaf.reshape((L, N * nb, page) + sub_leaf.shape[3:])
+    flat = tables_sub.reshape(N * nb)
+    return pool_leaf.at[:, flat].set(blocks.astype(pool_leaf.dtype),
+                                     mode="drop")

@@ -60,6 +60,19 @@ class Scheduler:
         self.n_admitted += 1
         return slot, req
 
+    def requeue(self, slot: int):
+        """Undo an admission: put the slot's request back at the *head* of
+        the queue (FCFS order preserved) and free the slot.  Used by the
+        paged engine's admission backpressure when the page pool cannot
+        cover the request yet."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is free; nothing to requeue")
+        self.slots[slot] = None
+        self.n_admitted -= 1
+        self.queue.appendleft(req)
+        return req
+
     def release(self, slot: int):
         """Free a slot; returns the request that occupied it."""
         req = self.slots[slot]
