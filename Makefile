@@ -19,10 +19,13 @@ test-fast: docs-check
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-# Toy-scale serve-throughput gate: fails on a >10% tokens/sec regression
-# against the checked-in BENCH_serve.json perf anchor.
+# Toy-scale perf gates against the checked-in repo-root anchors:
+#  - serve: >10% tokens/sec regression vs BENCH_serve.json fails;
+#  - train: executed kernel-level energy/time regression vs
+#    BENCH_train.json fails.
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.serve_continuous --smoke --check
+	PYTHONPATH=src python -m benchmarks.train_dvfs --smoke --check
 
 # Verify every command fenced in docs/*.md against the benchmark
 # registry and every [[artifact]] reference against the working tree.

@@ -1,4 +1,5 @@
-"""Shared benchmark plumbing: the GPT-3-xl case-study campaign (paper §4)."""
+"""Shared benchmark plumbing: the GPT-3-xl case-study campaign (paper §4)
+and the governor-registry planning entry all DVFS benchmarks go through."""
 from __future__ import annotations
 
 import json
@@ -8,8 +9,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs import get_config, get_shape
-from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
-                        global_plan, local_plan)
+from repro.core import Campaign, WastePolicy, build_workload, get_chip
+from repro.dvfs import governor
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench")
@@ -33,6 +34,17 @@ def gpt3xl_campaign(chip_name: str = "rtx3080ti", seed: int = 0,
     camp = Campaign(chip, seed=seed, n_reps=n_reps)
     table = camp.run(kernels)
     return camp, table
+
+
+def solve(table, gov: str = "kernel-static", tau: float = 0.0, **gov_kw):
+    """Plan one measurement table through the ``repro.dvfs`` governor
+    registry (the facade every DVFS benchmark routes planning through).
+
+    Returns the governor's legacy per-kernel :class:`~repro.core.Plan` —
+    the same object the named planner functions produce, so benchmark
+    numbers are unchanged; only the entry point is unified.
+    """
+    return governor(gov, policy=WastePolicy(tau), **gov_kw).solve(table)
 
 
 def fmt_pct(x: float) -> str:

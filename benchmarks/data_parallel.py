@@ -4,15 +4,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import WastePolicy, global_plan
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 BATCHES = (40, 20, 10, 8, 4, 2, 1)
 
 
 def main(verbose: bool = True):
     camp0, table0 = gpt3xl_campaign(batch=40)
-    plan = global_plan(table0, WastePolicy(0.0))
+    plan = solve(table0, "kernel-static")
     rows = []
     for b in BATCHES:
         camp, table = gpt3xl_campaign(batch=b, seed=100 + b)

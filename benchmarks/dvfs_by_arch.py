@@ -11,9 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import all_cells, get_config, get_shape
-from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
-                        global_plan)
-from .common import save_artifact
+from repro.core import Campaign, build_workload, get_chip
+from .common import save_artifact, solve
 
 
 def main(verbose: bool = True, chip_name: str = "tpu-v5e"):
@@ -26,7 +25,7 @@ def main(verbose: bool = True, chip_name: str = "tpu-v5e"):
                                  include_comm=True)
         camp = Campaign(chip, seed=hash((arch, sname)) % 2**31, n_reps=5)
         table = camp.run(kernels)
-        plan = global_plan(table, WastePolicy(0.0))
+        plan = solve(table, "kernel-static")
         rows.append({"arch": arch, "shape": sname,
                      "n_kernels": len(kernels),
                      "time_pct": plan.time_pct,

@@ -3,16 +3,15 @@ A4000-class chip (narrower V/F range) — savings shrink, clock *types*
 transfer."""
 from __future__ import annotations
 
-from repro.core import (WastePolicy, edp_global_plan, global_plan)
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 
 def main(verbose: bool = True):
     out = {}
     for chip in ("rtx3080ti", "a4000"):
         camp, table = gpt3xl_campaign(chip_name=chip)
-        g = global_plan(table, WastePolicy(0.0))
-        e = edp_global_plan(table)
+        g = solve(table, "kernel-static")
+        e = solve(table, "edp", level="global")
         out[chip] = {"waste": g.summary(), "edp": e.summary()}
         if verbose:
             print(f"[heterogeneity] {chip:10s} strict-waste "

@@ -2,13 +2,12 @@
 globally-aggregated strict waste."""
 from __future__ import annotations
 
-from repro.core import WastePolicy, global_plan
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 
 def main(verbose: bool = True):
     camp, table = gpt3xl_campaign()
-    plan = global_plan(table, WastePolicy(0.0))
+    plan = solve(table, "kernel-static")
     rows = plan.per_kernel()
     out = {"rows": rows, "totals": plan.summary()}
     if verbose:

@@ -8,9 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import WastePolicy, pass_level_plan
 from repro.core.planner import _pass_tables
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 
 def main(verbose: bool = True):
@@ -45,7 +44,7 @@ def main(verbose: bool = True):
                   f"{b if b is None else (b['mem'], b['core'])} "
                   f"t={b['time_pct'] if b else '--'}% "
                   f"e={b['energy_pct'] if b else '--'}%")
-    plan = pass_level_plan(table, WastePolicy(0.0), aggregation="global")
+    plan = solve(table, "pass-level", aggregation="global")
     out["strict_totals"] = plan.summary()
     if verbose:
         s = plan.summary()

@@ -3,10 +3,7 @@ vs global aggregation (incl. the strict tau=0 point and the energy-only
 asymptote)."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import WastePolicy, global_plan, local_plan
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 TAUS = (0.0, 0.005, 0.01, 0.02, 0.05, 0.10, 0.20, 0.30, 0.50, 1.0)
 
@@ -15,8 +12,8 @@ def main(verbose: bool = True):
     camp, table = gpt3xl_campaign()
     rows = []
     for tau in TAUS:
-        g = global_plan(table, WastePolicy(tau))
-        l = local_plan(table, WastePolicy(tau))
+        g = solve(table, "kernel-static", tau=tau)
+        l = solve(table, "kernel-static", tau=tau, aggregation="local")
         rows.append({"tau_pct": 100 * tau,
                      "global_time_pct": g.time_pct,
                      "global_energy_pct": g.energy_pct,
@@ -28,7 +25,7 @@ def main(verbose: bool = True):
                   f"  local e={l.energy_pct:+7.2f}% "
                   f"(t={l.time_pct:+6.2f}%)")
     # energy-only asymptote (tau -> inf)
-    e_only = global_plan(table, WastePolicy(1e9))
+    e_only = solve(table, "kernel-static", tau=1e9)
     rows.append({"tau_pct": float("inf"),
                  "global_time_pct": e_only.time_pct,
                  "global_energy_pct": e_only.energy_pct})

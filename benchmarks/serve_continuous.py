@@ -13,11 +13,12 @@ Four claims, measured:
 2. **Paging** — the same workload served by the paged-KV engine with
    **2x the slots at the same KV HBM budget** (block-table page pool
    sized to the dense engine's byte count).
-3. **DVFS** — the engine replays an offline
-   :class:`~repro.core.phase_plan.PhasePlanBundle` (prefill + per-bucket
-   decode plans, planned for the full-size arch on the TPU-v5e-like chip)
-   through ``PhaseExecutor``, reporting executed energy vs the auto
-   governor at <= the policy's time budget, with per-phase switch counts.
+3. **DVFS** — a :class:`~repro.dvfs.DvfsSession` plans every serving
+   phase (prefill + per-bucket decode, for the full-size arch on the
+   TPU-v5e-like chip) and the engine replays the resulting
+   :class:`~repro.dvfs.DvfsPlan` through the session's governor
+   executor, reporting executed energy vs the auto governor at <= the
+   policy's time budget, with per-phase switch counts.
 4. **Planner cost** — wall time of the (vectorized) phase-bundle planning
    itself, the number future PRs diff against.
 
@@ -179,8 +180,7 @@ def throughput_section(n_requests: int = N_REQUESTS,
 def main(verbose: bool = True) -> Dict:
     from repro.configs import REGISTRY
     from repro.configs.base import ShapeConfig
-    from repro.core import WastePolicy, get_chip, plan_phase_bundle
-    from repro.runtime import PhaseExecutor
+    from repro.dvfs import DvfsSession
     from repro.serve import ServeEngine
     from .common import save_artifact
 
@@ -189,23 +189,25 @@ def main(verbose: bool = True) -> Dict:
     speedup = out["throughput_speedup"]
 
     # --- 3. DVFS: plan the full-size arch, replay through the engine ----
+    # One DvfsSession runs campaign -> plan -> govern -> meter; the
+    # kernel-static governor + simulated controller reproduce the legacy
+    # plan_phase_bundle/PhaseExecutor pipeline bit-for-bit.
     full = REGISTRY[ARCH]
-    chip = get_chip("tpu-v5e")
     pre = ShapeConfig(name="serve_prefill", seq_len=512, global_batch=1,
                       kind="prefill")
     dec = ShapeConfig(name="serve_decode", seq_len=512, global_batch=SLOTS,
                       kind="decode")
-    t0 = time.perf_counter()
-    bundle = plan_phase_bundle(full, chip, n_slots=SLOTS,
-                               prefill_shape=pre, decode_shape=dec,
-                               policy=WastePolicy(TAU), n_reps=10)
-    planner_wall_s = time.perf_counter() - t0
+    sess = DvfsSession(chip="tpu-v5e", tau=TAU, n_reps=10)
+    sess.plan_serve(full, n_slots=SLOTS, prefill_shape=pre,
+                    decode_shape=dec)
+    planner_wall_s = sess.planner_wall_s
+    chip = sess.chip
     model, params, cfg = _smoke_model()
-    ex = PhaseExecutor(bundle, chip)
     eng = ServeEngine(model, params, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      executor=ex)
+                      executor=sess.serve_executor())
     eng.generate(_requests(cfg.vocab_size))
     energy = eng.energy_summary()
+    sess.close()
 
     out.update({"tau": TAU, "energy": energy,
                 "planner_wall_s": planner_wall_s})

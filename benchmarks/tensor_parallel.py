@@ -5,15 +5,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import WastePolicy, global_plan
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 DEGREES = (1, 2, 4, 8, 16)
 
 
 def main(verbose: bool = True):
     camp0, table0 = gpt3xl_campaign(tp=1, sp=True)
-    plan = global_plan(table0, WastePolicy(0.0))
+    plan = solve(table0, "kernel-static")
     rows = []
     for d in DEGREES:
         camp, table = gpt3xl_campaign(tp=d, sp=True, seed=200 + d)

@@ -1,11 +1,9 @@
 """Paper Table 2: time/energy totals for {coarse, fine} x {local, global}
-x {waste, EDP}."""
+x {waste, EDP} — every cell produced through the repro.dvfs governor
+registry (one facade, seven policy variants)."""
 from __future__ import annotations
 
-from repro.core import (WastePolicy, edp_global_plan, edp_local_plan,
-                        edp_pass_plan, global_plan, local_plan,
-                        pass_level_plan)
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 PAPER = {  # the paper's Table 2, for side-by-side reporting
     "pass-local": (-0.20, -1.98), "pass-global": (-0.10, -2.07),
@@ -18,13 +16,13 @@ PAPER = {  # the paper's Table 2, for side-by-side reporting
 def main(verbose: bool = True):
     camp, table = gpt3xl_campaign()
     plans = [
-        pass_level_plan(table, WastePolicy(0.0), aggregation="local"),
-        pass_level_plan(table, WastePolicy(0.0), aggregation="global"),
-        local_plan(table, WastePolicy(0.0)),
-        global_plan(table, WastePolicy(0.0)),
-        edp_pass_plan(table),
-        edp_local_plan(table),
-        edp_global_plan(table),
+        solve(table, "pass-level", aggregation="local"),
+        solve(table, "pass-level", aggregation="global"),
+        solve(table, "kernel-static", aggregation="local"),
+        solve(table, "kernel-static", aggregation="global"),
+        solve(table, "edp", level="pass"),
+        solve(table, "edp", level="local"),
+        solve(table, "edp", level="global"),
     ]
     rows = []
     for p in plans:

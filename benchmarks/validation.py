@@ -5,13 +5,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import WastePolicy, global_plan
-from .common import gpt3xl_campaign, save_artifact
+from .common import gpt3xl_campaign, save_artifact, solve
 
 
 def main(verbose: bool = True, n_rounds: int = 10):
     camp, table = gpt3xl_campaign()
-    plan = global_plan(table, WastePolicy(0.0))
+    plan = solve(table, "kernel-static")
     disc_t, disc_e = plan.time_pct, plan.energy_pct
     dts, des = [], []
     for _ in range(n_rounds):

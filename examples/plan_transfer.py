@@ -8,8 +8,8 @@ kernels) variants — the deployment pattern for a 1000-node fleet: one
 Run:  PYTHONPATH=src python examples/plan_transfer.py
 """
 from repro.configs import get_config, get_shape
-from repro.core import (Campaign, WastePolicy, build_workload, get_chip,
-                        global_plan)
+from repro.core import Campaign, build_workload, get_chip
+from repro.dvfs import governor
 
 
 def main():
@@ -19,7 +19,7 @@ def main():
 
     kernels = build_workload(cfg, shape)
     table = Campaign(chip, seed=0, n_reps=5).run(kernels)
-    plan = global_plan(table, WastePolicy(0.0))
+    plan = governor("kernel-static").solve(table)
     print(f"discovered (batch 40, TP=1): {plan.energy_pct:+.2f}% energy, "
           f"{plan.time_pct:+.2f}% time")
 

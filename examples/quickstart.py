@@ -1,16 +1,17 @@
-"""Quickstart: the whole pipeline in one page.
+"""Quickstart: the whole pipeline in one page, via the repro.dvfs facade.
 
 1. Decompose a GPT-3-xl training iteration into kernels (paper Table 1).
 2. Run the simulated DVFS measurement campaign (paper §4).
-3. Plan: strict-waste kernel-level global optimum vs pass-level vs EDP.
-4. Compile the plan into a deployable DVFS schedule.
+3. Plan with three governors from the registry: strict-waste kernel-level
+   global optimum vs pass-level vs EDP.
+4. Compile the winning plan into the unified, versioned DvfsPlan IR and
+   save it (the artifact a DvfsSession executor replays).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs import get_config, get_shape
-from repro.core import (Campaign, WastePolicy, build_workload,
-                        edp_global_plan, get_chip, global_plan,
-                        pass_level_plan, schedule_from_plan)
+from repro.core import Campaign, build_workload, get_chip
+from repro.dvfs import DvfsPlan, governor
 
 
 def main():
@@ -26,19 +27,23 @@ def main():
     tb, eb = table.baseline_totals()
     print(f"auto baseline: {tb*1e3:.0f} ms/iter, {eb:.0f} J/iter")
 
-    for plan in (pass_level_plan(table, WastePolicy(0.0)),
-                 global_plan(table, WastePolicy(0.0)),
-                 edp_global_plan(table)):
-        s = plan.summary()
+    for name, kw in (("pass-level", {}), ("kernel-static", {}),
+                     ("edp", {"level": "global"})):
+        s = governor(name, **kw).solve(table).summary()
         print(f"  {s['plan']:14s} time {s['time_pct']:+7.2f}%  "
               f"energy {s['energy_pct']:+7.2f}%")
 
-    plan = global_plan(table, WastePolicy(0.0))
-    sched = schedule_from_plan(plan)
-    print(f"schedule: {len(sched.entries)} coalesced entries, "
-          f"{sched.n_switches} clock switches per iteration")
-    sched.save("artifacts/quickstart_schedule.json")
-    print("saved artifacts/quickstart_schedule.json")
+    gov = governor("kernel-static")
+    plan = gov.plan_table(table, meta={"model": cfg.name,
+                                       "shape": shape.name})
+    seg = plan.segment("iteration")
+    print(f"plan IR: schema v{plan.schema_version}, "
+          f"{len(plan.segments)} segment(s), "
+          f"{len(seg.schedule.entries)} coalesced entries, "
+          f"{seg.schedule.n_switches} clock switches per iteration")
+    plan.save("artifacts/quickstart_plan.json")
+    print("saved artifacts/quickstart_plan.json "
+          f"(round-trips: {DvfsPlan.load('artifacts/quickstart_plan.json').summary() == plan.summary()})")
 
 
 if __name__ == "__main__":

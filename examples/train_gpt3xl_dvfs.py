@@ -3,11 +3,12 @@ kernel-level DVFS.
 
 Trains a reduced GPT-3 on the synthetic corpus with the fault-tolerant
 Trainer (checkpoint/restart, straggler watchdog) while a
-``TrainPhaseExecutor`` *executes* the planned fwd/bwd/opt clock schedules
-around every step — per-phase frequency actuation plus exact per-phase
-energy accounting vs the auto governor.  An injected failure exercises
-the restart path, including mid-plan resume of the executor's books; the
-``TrainPlanBundle`` is saved to artifacts/train_plan_bundle.json.
+:class:`~repro.dvfs.DvfsSession` executor *executes* the planned
+fwd/bwd/opt clock schedules around every step — per-phase frequency
+actuation plus exact per-phase energy accounting vs the auto governor.
+An injected failure exercises the restart path, including mid-plan
+resume of the executor's books; the unified ``DvfsPlan`` IR is saved to
+artifacts/train_plan_bundle.json.
 
 Run:  PYTHONPATH=src python examples/train_gpt3xl_dvfs.py \\
           [--steps 60] [--d-model 256] [--layers 4] [--full]
@@ -16,14 +17,12 @@ Run:  PYTHONPATH=src python examples/train_gpt3xl_dvfs.py \\
 import argparse
 import dataclasses
 
-import jax
-
-from repro.configs import get_config, get_shape, smoke_config
-from repro.core import WastePolicy, get_chip, plan_train_bundle
+from repro.configs import get_config, get_shape
 from repro.ckpt import CheckpointManager
 from repro.data import DataPipeline
+from repro.dvfs import DvfsSession
 from repro.models import build_model
-from repro.runtime import FailureInjector, TrainPhaseExecutor
+from repro.runtime import FailureInjector
 from repro.train import OptimizerConfig, make_train_step
 from repro.train.loop import Trainer, TrainerConfig
 
@@ -56,15 +55,15 @@ def main():
     total, _ = cfg.param_count()
     print(f"model: {total/1e6:.1f}M params")
 
-    # --- DVFS plan for this training iteration (paper pipeline) ---
+    # --- DVFS plan for this training iteration (repro.dvfs facade) ---
     shape = dataclasses.replace(get_shape("paper_gpt3xl"),
                                 seq_len=args.seq,
                                 global_batch=args.batch)
-    chip = get_chip("tpu-v5e")             # IVR-class switch latency
-    bundle = plan_train_bundle(cfg, chip, shape=shape,
-                               policy=WastePolicy(0.006), n_reps=5)
-    bundle.save("artifacts/train_plan_bundle.json")
-    for ph, row in bundle.summary()["phases"].items():
+    # tpu-v5e: IVR-class switch latency makes per-kernel DVFS realizable
+    session = DvfsSession(chip="tpu-v5e", tau=0.006, n_reps=5)
+    plan = session.plan_train(cfg, shape=shape)
+    plan.save("artifacts/train_plan_bundle.json")
+    for ph, row in plan.summary()["phases"].items():
         print(f"  {ph:4s} plan: {row['energy_pct']:+7.2f}% energy at "
               f"{row['time_pct']:+6.2f}% time "
               f"({row['n_switches']} switches)")
@@ -80,10 +79,11 @@ def main():
         model, step, pipeline,
         CheckpointManager(args.ckpt_dir, keep=2),
         TrainerConfig(total_steps=args.steps, ckpt_every=10, log_every=10),
-        executor=TrainPhaseExecutor(bundle, chip),
+        executor=session.train_executor(),
         failure_injector=FailureInjector(
             [args.fail_at] if args.fail_at >= 0 else []))
     out = trainer.run()
+    session.close()
 
     first = trainer.history[0]["loss"]
     last = trainer.history[-1]["loss"]

@@ -231,12 +231,13 @@ def _splice_plans(T: np.ndarray, E: np.ndarray, chA: np.ndarray,
 
 
 def coalesced_global_plan(table: MeasurementTable,
-                          policy: WastePolicy = WastePolicy(),
+                          policy: Optional[WastePolicy] = None,
                           switch_latency_s: Optional[float] = None,
                           switch_power_w: float = SWITCH_POWER_W,
                           sequence: Optional[np.ndarray] = None
                           ) -> CoalescedPlan:
     """Energy-min plan under the time budget *including* switch costs."""
+    policy = policy if policy is not None else WastePolicy()
     seq = expand_sequence(table) if sequence is None else sequence
     T = table.time[seq]
     E = table.energy[seq]

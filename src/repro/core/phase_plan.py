@@ -54,7 +54,8 @@ from .planner import Plan
 from .power_model import Chip, KernelSpec
 from .schedule import (DVFSSchedule, schedule_from_plan,
                        schedule_from_coalesced)
-from .workload import WorkloadBuilder, decode_slot_buckets
+from .workload import (WorkloadBuilder, decode_slot_buckets,
+                       pick_decode_bucket)
 
 
 @dataclass
@@ -104,8 +105,56 @@ class PhasePlan:
                 else (AUTO, AUTO) for d in counts]
 
 
+class _IRBundleIO:
+    """Serialization + reporting shared by both bundles.
+
+    Single-sourced in the unified plan IR
+    (:class:`~repro.dvfs.plan_ir.DvfsPlan`): ``to_json`` emits the
+    versioned IR wire format, ``from_json`` reads it (and falls back to
+    the pre-IR legacy format for old artifacts), and ``summary`` is the
+    IR's one reporting implementation.
+    """
+
+    def to_ir(self):
+        raise NotImplementedError
+
+    @classmethod
+    def _from_ir(cls, ir):
+        raise NotImplementedError
+
+    @classmethod
+    def _from_legacy_dict(cls, d: Dict):
+        raise NotImplementedError
+
+    def to_json(self) -> str:
+        return self.to_ir().to_json()
+
+    @classmethod
+    def from_json(cls, s: str):
+        d = json.loads(s)
+        if "segments" in d or "schema_version" in d:
+            from ..dvfs.plan_ir import DvfsPlan
+            return cls._from_ir(DvfsPlan.from_dict(d))
+        return cls._from_legacy_dict(d)
+
+    def save(self, path: str):
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str):
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def summary(self) -> Dict:
+        return self.to_ir().summary()
+
+
 @dataclass
-class PhasePlanBundle:
+class PhasePlanBundle(_IRBundleIO):
     """Prefill plan + decode plans keyed by active-slot-count bucket."""
 
     chip_name: str
@@ -119,10 +168,7 @@ class PhasePlanBundle:
 
     def decode_bucket(self, n_active: int) -> int:
         """Smallest bucket >= n_active (largest bucket if none)."""
-        for b in self.buckets:
-            if b >= n_active:
-                return b
-        return self.buckets[-1]
+        return pick_decode_bucket(self.buckets, n_active)
 
     def decode_for(self, n_active: int) -> PhasePlan:
         return self.decode[self.decode_bucket(n_active)]
@@ -132,51 +178,26 @@ class PhasePlanBundle:
         out.update({f"decode@{b}": self.decode[b] for b in self.buckets})
         return out
 
-    # -- serialization ---------------------------------------------------
-    def to_json(self) -> str:
-        return json.dumps({
-            "chip": self.chip_name,
-            "meta": self.meta,
-            "prefill": self.prefill.to_dict(),
-            "decode": {str(b): p.to_dict() for b, p in self.decode.items()},
-        }, indent=1)
+    # -- serialization: single-sourced in the IR (see _IRBundleIO) -------
+    def to_ir(self):
+        from ..dvfs.plan_ir import DvfsPlan
+        return DvfsPlan.from_phase_bundle(self)
 
     @classmethod
-    def from_json(cls, s: str) -> "PhasePlanBundle":
-        d = json.loads(s)
+    def _from_ir(cls, ir) -> "PhasePlanBundle":
+        return ir.to_phase_bundle()
+
+    @classmethod
+    def _from_legacy_dict(cls, d: Dict) -> "PhasePlanBundle":
         return cls(chip_name=d["chip"],
                    prefill=PhasePlan.from_dict(d["prefill"]),
                    decode={int(b): PhasePlan.from_dict(p)
                            for b, p in d["decode"].items()},
                    meta=d.get("meta", {}))
 
-    def save(self, path: str):
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            f.write(self.to_json())
-
-    @classmethod
-    def load(cls, path: str) -> "PhasePlanBundle":
-        with open(path) as f:
-            return cls.from_json(f.read())
-
-    def summary(self) -> Dict:
-        rows = {}
-        for name, p in self.phases().items():
-            m = p.schedule.meta
-            rows[name] = {
-                "time_pct": m.get("time_pct"),
-                "energy_pct": m.get("energy_pct"),
-                "n_switches": p.schedule.n_switches,
-                "n_kernels": len(p.kernels),
-            }
-        return {"chip": self.chip_name, "phases": rows, "meta": self.meta}
-
 
 def compile_phase(table: MeasurementTable, name: str, chip: Chip,
-                  policy: WastePolicy = WastePolicy(),
+                  policy: Optional[WastePolicy] = None,
                   planner: Optional[Callable[..., Plan]] = None
                   ) -> PhasePlan:
     """Compile one phase's measurement table into a deployable PhasePlan.
@@ -189,6 +210,7 @@ def compile_phase(table: MeasurementTable, name: str, chip: Chip,
     switch overhead and re-planned so the *executed* phase still meets the
     policy.
     """
+    policy = policy if policy is not None else WastePolicy()
     if planner is None:
         cp = coalesced_global_plan(
             table, policy, switch_latency_s=chip.switch_latency_s)
@@ -212,7 +234,7 @@ def plan_phase_bundle(cfg: ModelConfig, chip: Chip, *,
                       n_slots: int,
                       prefill_shape: ShapeConfig,
                       decode_shape: ShapeConfig,
-                      policy: WastePolicy = WastePolicy(),
+                      policy: Optional[WastePolicy] = None,
                       planner: Optional[Callable[..., Plan]] = None,
                       seed: int = 0, n_reps: int = 5,
                       tp: int = 1, dp: int = 1,
@@ -232,6 +254,7 @@ def plan_phase_bundle(cfg: ModelConfig, chip: Chip, *,
     by the realized switch overhead and re-planned so the *executed* phase
     still meets the policy.
     """
+    policy = policy if policy is not None else WastePolicy()
     camp = Campaign(chip, seed=seed, n_reps=n_reps)
 
     def plan_one(name: str, kernels: List[KernelSpec]) -> PhasePlan:
@@ -272,7 +295,7 @@ def train_phase_of(kernel: KernelSpec) -> str:
 
 
 @dataclass
-class TrainPlanBundle:
+class TrainPlanBundle(_IRBundleIO):
     """Per-train-phase plans: one switch-aware schedule per fwd/bwd/opt.
 
     The training analogue of :class:`PhasePlanBundle`: the offline planner
@@ -296,46 +319,21 @@ class TrainPlanBundle:
     def step_energy_j(self) -> float:
         return sum(p.energy_j for p in self.phases.values())
 
-    # -- serialization ---------------------------------------------------
-    def to_json(self) -> str:
-        return json.dumps({
-            "chip": self.chip_name,
-            "meta": self.meta,
-            "phases": {n: p.to_dict() for n, p in self.phases.items()},
-        }, indent=1)
+    # -- serialization: single-sourced in the IR (see _IRBundleIO) -------
+    def to_ir(self):
+        from ..dvfs.plan_ir import DvfsPlan
+        return DvfsPlan.from_train_bundle(self)
 
     @classmethod
-    def from_json(cls, s: str) -> "TrainPlanBundle":
-        d = json.loads(s)
+    def _from_ir(cls, ir) -> "TrainPlanBundle":
+        return ir.to_train_bundle()
+
+    @classmethod
+    def _from_legacy_dict(cls, d: Dict) -> "TrainPlanBundle":
         return cls(chip_name=d["chip"],
                    phases={n: PhasePlan.from_dict(p)
                            for n, p in d["phases"].items()},
                    meta=d.get("meta", {}))
-
-    def save(self, path: str):
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            f.write(self.to_json())
-
-    @classmethod
-    def load(cls, path: str) -> "TrainPlanBundle":
-        with open(path) as f:
-            return cls.from_json(f.read())
-
-    def summary(self) -> Dict:
-        rows = {}
-        for name in self.phase_names():
-            p = self.phases[name]
-            m = p.schedule.meta
-            rows[name] = {
-                "time_pct": m.get("time_pct"),
-                "energy_pct": m.get("energy_pct"),
-                "n_switches": p.schedule.n_switches,
-                "n_kernels": len(p.kernels),
-            }
-        return {"chip": self.chip_name, "phases": rows, "meta": self.meta}
 
 
 def calibrate_workload_against_hlo(kernels: List[KernelSpec],
@@ -363,7 +361,7 @@ def calibrate_workload_against_hlo(kernels: List[KernelSpec],
 
 def plan_train_bundle(cfg: ModelConfig, chip: Chip, *,
                       shape: ShapeConfig,
-                      policy: WastePolicy = WastePolicy(),
+                      policy: Optional[WastePolicy] = None,
                       planner: Optional[Callable[..., Plan]] = None,
                       seed: int = 0, n_reps: int = 5,
                       tp: int = 1, dp: int = 1,
@@ -386,6 +384,7 @@ def plan_train_bundle(cfg: ModelConfig, chip: Chip, *,
     kernel- vs pass-level, or transferred vs replanned — against one
     measurement campaign instead of re-measuring.
     """
+    policy = policy if policy is not None else WastePolicy()
     if shape.kind != "train":
         raise ValueError(f"train shape required, got kind={shape.kind!r}")
     if table is None:

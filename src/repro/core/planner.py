@@ -80,9 +80,10 @@ class Plan:
 # Kernel-level planners
 # ---------------------------------------------------------------------------
 
-def local_plan(table: MeasurementTable, policy: WastePolicy = WastePolicy()
+def local_plan(table: MeasurementTable, policy: Optional[WastePolicy] = None
                ) -> Plan:
     """Every kernel independently obeys t_k <= (1+tau) * t_k(auto)."""
+    policy = policy if policy is not None else WastePolicy()
     n, _ = table.time.shape
     choice = np.full(n, table.auto_idx)
     for k in range(n):
@@ -99,11 +100,12 @@ def _lagrangian_choice(table: MeasurementTable, lam: float) -> np.ndarray:
     return np.argmin(score, axis=1)
 
 
-def global_plan(table: MeasurementTable, policy: WastePolicy = WastePolicy(),
+def global_plan(table: MeasurementTable, policy: Optional[WastePolicy] = None,
                 refine: bool = True) -> Plan:
     """Global optimum: only the total time is constrained (paper's
     constraint-solver aggregation), via Lagrangian relaxation + greedy
     slack refill."""
+    policy = policy if policy is not None else WastePolicy()
     t_base, _ = table.baseline_totals()
     budget = policy.budget(t_base)
 
@@ -174,9 +176,10 @@ def _greedy_refill(table: MeasurementTable, choice: np.ndarray,
 
 
 def global_plan_dp(table: MeasurementTable,
-                   policy: WastePolicy = WastePolicy(),
+                   policy: Optional[WastePolicy] = None,
                    n_bins: int = 2000) -> Plan:
     """Exact (discretized) multiple-choice knapsack DP, for validation."""
+    policy = policy if policy is not None else WastePolicy()
     t_base, _ = table.baseline_totals()
     budget = policy.budget(t_base)
     w = table.weights
@@ -235,9 +238,10 @@ def _pass_tables(table: MeasurementTable) -> Dict[str, np.ndarray]:
 
 
 def pass_level_plan(table: MeasurementTable,
-                    policy: WastePolicy = WastePolicy(),
+                    policy: Optional[WastePolicy] = None,
                     aggregation: str = "global") -> Plan:
     """One clock pair per pass (the paper's §5 coarse baseline)."""
+    policy = policy if policy is not None else WastePolicy()
     groups = _pass_tables(table)
     names = list(groups)
     Tm = np.stack([groups[g][0] for g in names])   # (n_pass, n_pairs)

@@ -86,12 +86,13 @@ def _candidate_mask(chip: Chip, kernels: Sequence[KernelSpec],
 
 
 def search_plan(chip: Chip, kernels: Sequence[KernelSpec],
-                policy: WastePolicy = WastePolicy(),
+                policy: Optional[WastePolicy] = None,
                 rounds: int = 3, base_reps: int = 1, keep_frac: float = 0.5,
                 seed: int = 0,
                 noise: Optional[NoiseModel] = None
                 ) -> Tuple[Plan, SearchReport]:
     """Boundedness-pruned successive-halving search + global planning."""
+    policy = policy if policy is not None else WastePolicy()
     pairs = chip.grid.pairs()
     n_k, n_p = len(kernels), len(pairs)
     camp = Campaign(chip, seed=seed, n_reps=1, noise=noise)

@@ -562,6 +562,18 @@ def decode_slot_buckets(n_slots: int) -> List[int]:
     return buckets
 
 
+def pick_decode_bucket(buckets: List[int], n_active: int) -> int:
+    """THE bucket-routing rule: smallest bucket >= n_active (largest if
+    none).  Single-sourced so the plan IR and the legacy bundle shim can
+    never route decode steps differently."""
+    if not buckets:
+        raise KeyError("no decode buckets to route to")
+    for b in buckets:
+        if b >= n_active:
+            return b
+    return buckets[-1]
+
+
 def decode_bucket_workloads(cfg: ModelConfig, shape: ShapeConfig,
                             n_slots: int, **kw
                             ) -> "Dict[int, List[KernelSpec]]":

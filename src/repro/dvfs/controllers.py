@@ -1,0 +1,128 @@
+"""Frequency-controller backends, registered by name.
+
+The :class:`~repro.runtime.energy.FrequencyController` protocol is the
+deployment contract a plan executes against.  This module makes the
+backend pluggable the same way governors are::
+
+    ctl = controller("simulated", chip)          # ideal analytic replay
+    ctl = controller("rate-limited", chip,       # real-driver constraints
+                     min_interval_s=1e-3)
+
+* ``simulated`` — :class:`~repro.runtime.energy.SimulatedController`:
+  every requested switch lands, charged at the chip's switch latency.
+* ``rate-limited`` — :class:`RateLimitedController`: models the two
+  constraints real DVFS drivers impose (NVML ~100 ms application paths,
+  locked sysfs intervals, firmware mailboxes):
+
+  1. **step quantization** — arbitrary requested MHz snap to the chip's
+     discrete frequency grid (drivers expose a table, not a dial);
+  2. **rate limiting** — a request arriving within ``min_interval_s`` of
+     the previous *applied* switch is dropped (the clocks simply stay
+     put), counted in ``n_throttled``.  Executors advance the
+     controller's virtual clock with each schedule entry's dwell, so the
+     limit is enforced in modeled time, not host wall time.
+
+Plans replayed through a rate-limited controller therefore realize fewer
+switches than planned when the schedule switches faster than the driver
+can — the paper's §9 observation that high switching latencies "worsen
+the DVFS potential".  The executor surfaces this as realized switch
+counts and an ``n_throttled`` total in its summary; the *energy/time*
+integration itself stays plan-analytic (the meter charges the planned
+schedule), so use the coalesce planner's ``switch_latency_s`` to model
+the energy cost of slow switching, and this backend to audit how much of
+a schedule a constrained driver would actually admit.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from ..core.freq import AUTO, ClockPair
+from ..core.power_model import Chip
+from ..runtime.energy import FrequencyController, SimulatedController
+
+CONTROLLERS: Dict[str, type] = {}
+
+
+def register_controller(name: str):
+    """Class decorator: make a controller constructible by name."""
+    def deco(cls):
+        CONTROLLERS[name] = cls
+        return cls
+    return deco
+
+
+def controller(name: str, chip: Chip, **kwargs) -> FrequencyController:
+    """Instantiate a registered controller backend by name."""
+    if name not in CONTROLLERS:
+        raise ValueError(f"unknown controller {name!r}; registered: "
+                         f"{sorted(CONTROLLERS)}")
+    return CONTROLLERS[name](chip, **kwargs)
+
+
+register_controller("simulated")(SimulatedController)
+
+
+@register_controller("rate-limited")
+class RateLimitedController:
+    """Step-quantized, rate-limited controller (real driver constraints).
+
+    Tracks the same observables as the simulated backend (``current``,
+    ``n_switches``, ``switch_time_s``) plus ``n_throttled`` /
+    ``n_quantized`` so an executor summary shows how much of the plan the
+    driver actually admitted.
+    """
+
+    def __init__(self, chip: Chip, min_interval_s: float = 0.0,
+                 quantize: bool = True):
+        self.chip = chip
+        self.min_interval_s = float(min_interval_s)
+        self.quantize = quantize
+        self.current = ClockPair(AUTO, AUTO)
+        self.n_switches = 0
+        self.n_throttled = 0
+        self.n_quantized = 0
+        self.switch_time_s = 0.0
+        self._t = 0.0                    # modeled time (advance())
+        self._last_switch_t = -np.inf
+
+    @property
+    def switch_latency_s(self) -> float:
+        return self.chip.switch_latency_s
+
+    def _snap(self, value, grid_values) -> object:
+        if value == AUTO or not self.quantize:
+            return value
+        arr = np.asarray(grid_values, dtype=float)
+        snapped = float(arr[int(np.argmin(np.abs(arr - float(value))))])
+        if snapped != float(value):
+            self.n_quantized += 1
+        return snapped
+
+    def set_clocks(self, pair: ClockPair) -> None:
+        g = self.chip.grid
+        pair = ClockPair(self._snap(pair.mem, g.mem_clocks_mhz),
+                         self._snap(pair.core, g.core_clocks_mhz))
+        if pair == self.current:
+            return
+        if self._t - self._last_switch_t < self.min_interval_s:
+            self.n_throttled += 1        # driver refuses: clocks stay put
+            return
+        self.n_switches += 1
+        self.switch_time_s += self.chip.switch_latency_s
+        self._last_switch_t = self._t
+        self.current = pair
+
+    def advance(self, dt: float) -> None:
+        """Advance modeled time (called by executors with entry dwells)."""
+        self._t += max(float(dt), 0.0)
+
+    def reset(self) -> None:
+        # returning the chip to the governor always succeeds (drivers let
+        # you release a lock even mid-interval)
+        if self.current != ClockPair(AUTO, AUTO):
+            self.n_switches += 1
+            self.switch_time_s += self.chip.switch_latency_s
+            self._last_switch_t = self._t
+            self.current = ClockPair(AUTO, AUTO)

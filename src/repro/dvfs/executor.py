@@ -1,0 +1,296 @@
+"""Governor-driven DVFS execution: replay + accounting for any plan.
+
+``GovernorExecutor`` closes the plan → runtime loop for whatever plan a
+:class:`~repro.dvfs.governors.Governor` currently holds: it replays each
+executed segment's clock schedule through a registered
+:class:`~repro.runtime.energy.FrequencyController` backend, integrates
+energy with one :class:`~repro.runtime.energy.EnergyMeter` per segment
+(plus an auto-clock twin, so savings are measured against the governor
+baseline the paper compares to), and feeds every execution back to the
+governor's ``observe`` hook — which is how :class:`OnlineGovernor`
+detects drift.  When the governor re-plans (its ``revision`` bumps), the
+executor *flushes* the affected segment's books into a carry accumulator
+and re-meters against the new schedule, so accounting survives online
+re-planning without losing pre-drift records.
+
+* :class:`ServeGovernorExecutor` — serving hooks (``on_prefill`` /
+  ``on_decode(n_active)``), the engine-facing adapter.
+* :class:`TrainGovernorExecutor` — training hook (``on_step``), replays
+  ``fwd`` → ``bwd`` → ``opt`` back-to-back, and round-trips its books
+  through ``state_dict()`` / ``load_state_dict()`` for checkpoint-restart.
+
+The legacy :class:`~repro.runtime.dvfs_exec.PhaseExecutor` /
+``TrainPhaseExecutor`` are thin deprecation shims over these two.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from ..core.coalesce import SWITCH_POWER_W
+from ..core.freq import ClockPair
+from ..core.objectives import pct
+from ..core.power_model import Chip
+from ..runtime.energy import (EnergyMeter, FrequencyController,
+                              SimulatedController, StepEnergy)
+from .governors import BaseGovernor, StaticPlanGovernor
+from .plan_ir import DvfsPlan, PlanSegment
+
+TRAIN_SCOPE_ORDER = ("train-fwd", "train-bwd", "train-opt")
+
+
+class GovernorExecutor:
+    """Replay + accounting machinery over a governor's current plan."""
+
+    def __init__(self, governor: BaseGovernor, chip: Chip,
+                 controller: Optional[object] = None,
+                 measure_fn: Optional[
+                     Callable[[str], Tuple[float, float]]] = None):
+        plan = governor.plan
+        if plan is None:
+            raise ValueError("governor has no plan to execute; plan first "
+                             "(DvfsSession.plan_* or governor.adopt)")
+        if plan.chip_name != chip.name:
+            raise ValueError(f"bundle planned for {plan.chip_name!r}, "
+                             f"executing on {chip.name!r}")
+        self.governor = governor
+        self.chip = chip
+        if controller is None:
+            controller = SimulatedController(chip)
+        elif isinstance(controller, str):
+            # local import: repro.runtime <-> repro.dvfs are mutually
+            # importable; the registry is only needed for by-name resolution
+            from .controllers import controller as make_controller
+            controller = make_controller(controller, chip)
+        self.controller: FrequencyController = controller
+        self.measure_fn = measure_fn
+        # accounting: one (meter, baseline twin) per segment name, plus a
+        # carry accumulator that survives governor re-plans
+        self.meters: Dict[str, EnergyMeter] = {}
+        self.baseline: Dict[str, EnergyMeter] = {}
+        self.switches: Dict[str, int] = {}
+        self._steps: Dict[str, int] = {}
+        self._revision: Dict[str, int] = {}
+        self._carry: Dict[str, Dict[str, float]] = {}
+        for seg in plan.segments:
+            self._mount(seg)
+
+    # -- segment metering -------------------------------------------------
+    def _mount(self, seg: PlanSegment) -> None:
+        self.meters[seg.name] = EnergyMeter(self.chip, seg.kernels,
+                                            seg.schedule)
+        self.baseline[seg.name] = EnergyMeter(self.chip, seg.kernels, None)
+        self.switches.setdefault(seg.name, 0)
+        self._steps.setdefault(seg.name, 0)
+        self._revision[seg.name] = self.governor.revision
+        self._carry.setdefault(seg.name, {
+            "steps": 0, "time_s": 0.0, "energy_j": 0.0,
+            "base_time_s": 0.0, "base_energy_j": 0.0,
+            "internal_switches": 0})
+
+    def _flush(self, name: str) -> None:
+        """Fold the current meter's books into the carry accumulator (a
+        re-planned segment gets fresh meters without losing history)."""
+        m = self.meters[name].totals()
+        b = self.baseline[name].totals()
+        sched = self.meters[name].schedule
+        c = self._carry[name]
+        c["steps"] += int(m["steps"])
+        c["time_s"] += m["time_s"]
+        c["energy_j"] += m["energy_j"]
+        c["base_time_s"] += b["time_s"]
+        c["base_energy_j"] += b["energy_j"]
+        c["internal_switches"] += (sched.n_switches if sched is not None
+                                   else 0) * int(m["steps"])
+        self.meters[name].records.clear()
+        self.baseline[name].records.clear()
+
+    def _segment(self, name: str) -> PlanSegment:
+        seg = self.governor.segment(name)
+        if self._revision.get(name) != self.governor.revision:
+            # governor re-planned since we last metered this segment
+            if name in self.meters:
+                self._flush(name)
+            self._mount(seg)
+        return seg
+
+    # -- execution --------------------------------------------------------
+    def execute(self, name: str) -> StepEnergy:
+        """Replay one segment's clock schedule and meter it."""
+        seg = self._segment(name)
+        sw0 = getattr(self.controller, "n_switches", 0)
+        advance = getattr(self.controller, "advance", None)
+        for entry in seg.schedule.entries:
+            self.controller.set_clocks(ClockPair(entry.mem, entry.core))
+            if advance is not None:
+                advance(entry.expected_time_s)
+        self.switches[name] += getattr(self.controller, "n_switches",
+                                       sw0) - sw0
+        step = self._steps[name]
+        rec = self.meters[name].on_step(step)
+        self.baseline[name].on_step(step)
+        self._steps[name] = step + 1
+        if self.measure_fn is not None:
+            mt, me = self.measure_fn(name)
+            self.governor.observe(name, mt, me)
+        else:
+            self.governor.observe(name, rec.time_s, rec.energy_j)
+        return rec
+
+    # -- lifecycle --------------------------------------------------------
+    def reset(self) -> None:
+        """Clear accumulated accounting (per-segment records, switch
+        counts) AND the governor's feedback windows, so a warm-up
+        workload pollutes neither the measured books nor drift
+        detection."""
+        self.governor.reset_feedback()
+        for name in list(self.meters):
+            self.meters[name].records.clear()
+            self.baseline[name].records.clear()
+            self.switches[name] = 0
+            self._steps[name] = 0
+            c = self._carry[name]
+            for k in c:
+                c[k] = 0 if isinstance(c[k], int) else 0.0
+        self.controller.reset()
+
+    def finish(self) -> None:
+        """Return the chip to the governor (auto) clocks."""
+        self.controller.reset()
+
+    # -- reporting --------------------------------------------------------
+    def summary(self) -> Dict:
+        """Per-segment and total executed time/energy vs the auto
+        baseline, with per-segment switch counts."""
+        phases = {}
+        tot = {"steps": 0, "time_s": 0.0, "energy_j": 0.0,
+               "base_time_s": 0.0, "base_energy_j": 0.0, "n_switches": 0}
+        for name in self.meters:
+            m = self.meters[name].totals()
+            b = self.baseline[name].totals()
+            c = self._carry[name]
+            row = {"steps": int(m["steps"]) + int(c["steps"]),
+                   "time_s": m["time_s"] + c["time_s"],
+                   "energy_j": m["energy_j"] + c["energy_j"],
+                   "base_time_s": b["time_s"] + c["base_time_s"],
+                   "base_energy_j": b["energy_j"] + c["base_energy_j"],
+                   "n_switches": self.switches[name]}
+            # the meter charges the schedule's *internal* switches; phase-
+            # boundary transitions (observed at the controller) are extra
+            sched = self.meters[name].schedule
+            internal = (sched.n_switches if sched is not None else 0) \
+                * int(m["steps"]) + int(c["internal_switches"])
+            extra = max(row["n_switches"] - internal, 0)
+            row["time_s"] += extra * self.chip.switch_latency_s
+            row["energy_j"] += extra * self.chip.switch_latency_s \
+                * SWITCH_POWER_W
+            if row["base_energy_j"] > 0:
+                row["time_pct"] = pct(row["time_s"], row["base_time_s"])
+                row["energy_pct"] = pct(row["energy_j"],
+                                        row["base_energy_j"])
+            phases[name] = row
+            tot["steps"] += row["steps"]
+            tot["time_s"] += row["time_s"]
+            tot["energy_j"] += row["energy_j"]
+            tot["base_time_s"] += row["base_time_s"]
+            tot["base_energy_j"] += row["base_energy_j"]
+            tot["n_switches"] += row["n_switches"]
+        if tot["base_energy_j"] > 0:
+            tot["time_pct"] = pct(tot["time_s"], tot["base_time_s"])
+            tot["energy_pct"] = pct(tot["energy_j"], tot["base_energy_j"])
+        out = {"chip": self.chip.name, "phases": phases, "totals": tot}
+        if getattr(self.controller, "n_throttled", 0):
+            out["n_throttled"] = self.controller.n_throttled
+        if self.governor.revision > 1:
+            out["governor_revision"] = self.governor.revision
+            out["governor_events"] = list(self.governor.events)
+        return out
+
+
+class ServeGovernorExecutor(GovernorExecutor):
+    """Serving adapter: the engine calls the phase-transition hooks."""
+
+    @classmethod
+    def from_bundle(cls, bundle, chip: Chip, controller=None, **kw
+                    ) -> "ServeGovernorExecutor":
+        gov = StaticPlanGovernor(DvfsPlan.from_phase_bundle(bundle))
+        return cls(gov, chip, controller, **kw)
+
+    # -- phase hooks ------------------------------------------------------
+    def on_prefill(self) -> None:
+        # by scope, not by name — prefill segments may be named freely
+        self.execute(self.governor.plan.prefill_segment().name)
+
+    def on_decode(self, n_active: int) -> None:
+        # by scope+bucket, not by a "decode@<b>" name convention
+        seg = self.governor.plan.decode_segment(max(n_active, 1))
+        self.execute(seg.name)
+
+
+class TrainGovernorExecutor(GovernorExecutor):
+    """Training adapter: replays fwd -> bwd -> opt around every step."""
+
+    def __init__(self, governor: BaseGovernor, chip: Chip,
+                 controller=None, **kw):
+        super().__init__(governor, chip, controller, **kw)
+        self.last_step: Optional[int] = None
+
+    @classmethod
+    def from_bundle(cls, bundle, chip: Chip, controller=None, **kw
+                    ) -> "TrainGovernorExecutor":
+        gov = StaticPlanGovernor(DvfsPlan.from_train_bundle(bundle))
+        return cls(gov, chip, controller, **kw)
+
+    def _phase_names(self):
+        plan = self.governor.plan
+        by_scope = {s.scope: s.name for s in plan.segments}
+        return [by_scope[sc] for sc in TRAIN_SCOPE_ORDER if sc in by_scope]
+
+    # -- step hook --------------------------------------------------------
+    def on_step(self, step: int) -> StepEnergy:
+        """Execute one train step's fwd -> bwd -> opt segment schedules.
+
+        Returns the step's combined simulated time/energy (switch overhead
+        internal to each segment schedule included; segment-boundary
+        switches are accounted in :meth:`summary`)."""
+        t = e = 0.0
+        n_sw = 0
+        for name in self._phase_names():
+            rec = self.execute(name)
+            t += rec.time_s
+            e += rec.energy_j
+            n_sw += rec.n_switches
+        self.last_step = step
+        return StepEnergy(step=step, time_s=t, energy_j=e, n_switches=n_sw)
+
+    # -- checkpoint-resume ------------------------------------------------
+    def state_dict(self) -> Dict:
+        """Accounting state for checkpointing.  Records metered against
+        the *current* plan revision are analytic per-step constants, so
+        counts reconstruct them; books flushed into the carry by earlier
+        re-plans are checkpointed verbatim (their schedules may be gone)."""
+        return {"steps": dict(self._steps),
+                "switches": dict(self.switches),
+                "carry": {k: dict(v) for k, v in self._carry.items()},
+                "last_step": self.last_step}
+
+    def load_state_dict(self, state: Dict) -> None:
+        """Resume accounting mid-plan after a checkpoint restart."""
+        self.reset()
+        carry = state.get("carry", {})
+        for name, c in carry.items():
+            if name in self._carry:
+                self._carry[name].update(c)
+        for name, n in state.get("steps", {}).items():
+            if name not in self.meters:
+                continue
+            # only the steps metered against the current schedule are
+            # replayed; pre-re-plan steps are already in the carry
+            live = int(n) - int(carry.get(name, {}).get("steps", 0))
+            for i in range(max(live, 0)):
+                self.meters[name].on_step(i)
+                self.baseline[name].on_step(i)
+            self._steps[name] = int(n)
+        for name, n in state.get("switches", {}).items():
+            if name in self.switches:
+                self.switches[name] = int(n)
+        self.last_step = state.get("last_step")

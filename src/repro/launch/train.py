@@ -1,27 +1,23 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> ...``
 
-Production entry point: builds the model from the registry, discovers (or
-loads) the DVFS schedule, and drives the fault-tolerant trainer.  On this
-CPU container the full configs are not executable — ``--smoke`` runs the
-reduced config end-to-end; the full config path is exactly what a TPU
-deployment would run.
+Production entry point: builds the model from the registry, plans the
+per-phase DVFS schedule through a :class:`~repro.dvfs.DvfsSession` with
+the chosen governor, and drives the fault-tolerant trainer with the
+session's executor actuating (and metering) the plan around every step.
+On this CPU container the full configs are not executable — ``--smoke``
+runs the reduced config end-to-end; the full config path is exactly what
+a TPU deployment would run.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import os
-
-import jax
 
 from ..configs import get_config, get_shape, smoke_config, smoke_shape
-from ..core import (Campaign, WastePolicy, build_workload, get_chip,
-                    global_plan, schedule_from_plan)
 from ..ckpt import CheckpointManager
 from ..data import DataPipeline
+from ..dvfs import DvfsSession
 from ..models import build_model
-from ..runtime import EnergyMeter
 from ..train import OptimizerConfig, make_train_step
 from ..train.loop import Trainer, TrainerConfig
 
@@ -40,8 +36,16 @@ def main():
     ap.add_argument("--chip", default="tpu-v5e")
     ap.add_argument("--dvfs", choices=("off", "strict", "relaxed"),
                     default="strict")
+    ap.add_argument("--governor", default="kernel-static",
+                    help="repro.dvfs governor registry name "
+                         "(kernel-static | pass-level | edp | online)")
+    ap.add_argument("--controller", default=None,
+                    help="frequency-controller backend "
+                         "(simulated | rate-limited)")
     ap.add_argument("--tau", type=float, default=0.01)
-    ap.add_argument("--schedule-out", default=None)
+    ap.add_argument("--plan-out", "--schedule-out", dest="plan_out",
+                    default=None,
+                    help="save the planned DvfsPlan JSON here")
     ap.add_argument("--compress-grads", action="store_true")
     args = ap.parse_args()
 
@@ -53,22 +57,25 @@ def main():
     print(f"[train] {cfg.name} x {shape.name} "
           f"({cfg.param_count()[0]/1e6:.1f}M params)")
 
-    # --- DVFS plan for this workload ---
-    meter = None
+    # --- DVFS plan for this workload (campaign -> plan -> govern) ---
+    session = None
+    executor = None
     if args.dvfs != "off":
-        kernels = build_workload(get_config(args.arch),
-                                 get_shape(args.shape))
-        chip = get_chip(args.chip)
-        table = Campaign(chip, seed=0, n_reps=5).run(kernels)
         tau = 0.0 if args.dvfs == "strict" else args.tau
-        plan = global_plan(table, WastePolicy(tau))
-        sched = schedule_from_plan(plan)
-        print(f"[train] DVFS plan ({args.dvfs}): "
-              f"{plan.energy_pct:+.2f}% energy, {plan.time_pct:+.2f}% time")
-        if args.schedule_out:
-            sched.save(args.schedule_out)
-            print(f"[train] schedule -> {args.schedule_out}")
-        meter = EnergyMeter(chip, kernels, schedule=sched)
+        session = DvfsSession(chip=args.chip, tau=tau,
+                              governor=args.governor,
+                              controller=args.controller)
+        plan = session.plan_train(get_config(args.arch),
+                                  shape=get_shape(args.shape))
+        tot = plan.summary()["phases"]
+        print(f"[train] DVFS plan ({args.dvfs}, {args.governor}): " +
+              "  ".join(f"{ph}: {row['energy_pct']:+.2f}%e/"
+                        f"{row['time_pct']:+.2f}%t"
+                        for ph, row in tot.items()))
+        if args.plan_out:
+            plan.save(args.plan_out)
+            print(f"[train] plan -> {args.plan_out}")
+        executor = session.train_executor()
 
     model = build_model(cfg, block_k=64)
     step = make_train_step(
@@ -83,8 +90,14 @@ def main():
                       CheckpointManager(ckpt_dir, keep=3),
                       TrainerConfig(total_steps=args.steps,
                                     ckpt_every=args.ckpt_every),
-                      energy_meter=meter)
-    out = trainer.run()
+                      executor=executor)
+    try:
+        out = trainer.run()
+    finally:
+        # always hand the chip back to the auto governor, even when the
+        # run dies mid-step — a real driver must not stay pinned low
+        if session is not None:
+            session.close()
     print(f"[train] done: {json.dumps(out, default=float)}")
 
 

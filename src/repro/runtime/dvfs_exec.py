@@ -1,203 +1,60 @@
-"""Online DVFS execution: phase-plan replay + accounting for serving and
-training.
+"""Legacy executor entry points — thin shims over ``repro.dvfs``.
 
-The executors close the plan → runtime loop.  The planner emits a bundle
-offline (:class:`~repro.core.phase_plan.PhasePlanBundle` for serving,
-:class:`~repro.core.phase_plan.TrainPlanBundle` for training) and the
-runtime replays each phase's clock schedule through a
-:class:`~repro.runtime.energy.FrequencyController`, integrating energy
-with one :class:`~repro.runtime.energy.EnergyMeter` per phase (plus an
-auto-clock twin, so savings are measured against the governor baseline the
-paper compares to).
+The replay + accounting machinery that used to live here
+(``_BundleExecutor``) moved into the governor-driven
+:class:`~repro.dvfs.executor.GovernorExecutor`; the two classes below
+keep the historical bundle-first constructors working:
 
-* :class:`PhaseExecutor` — serving.  The engine calls ``on_prefill`` /
-  ``on_decode(n_active)`` at each phase transition.
-* :class:`TrainPhaseExecutor` — training.  The
-  :class:`~repro.train.loop.Trainer` calls ``on_step(step)`` once per
-  optimizer step; the executor replays the ``fwd`` → ``bwd`` → ``opt``
-  schedules back-to-back and returns that step's
-  :class:`~repro.runtime.energy.StepEnergy`.  Its accounting state
-  round-trips through ``state_dict()`` / ``load_state_dict()`` so a
-  checkpoint-restart resumes energy accounting mid-plan instead of
-  dropping the pre-failure records (the FT drill in
-  ``tests/test_plan_transfer.py`` exercises exactly this).
+* ``PhaseExecutor(bundle, chip)`` — serving replay of a
+  :class:`~repro.core.phase_plan.PhasePlanBundle`;
+* ``TrainPhaseExecutor(bundle, chip)`` — training replay of a
+  :class:`~repro.core.phase_plan.TrainPlanBundle`.
 
-Train-phase lifecycle (one optimizer step)::
-
-    on_step(s):  replay fwd clocks -> meter fwd
-                 replay bwd clocks -> meter bwd
-                 replay opt clocks -> meter opt
-                 return StepEnergy(s, Σ time, Σ energy, Σ switches)
-    finish():    return the chip to the governor (auto) clocks
+Both wrap the bundle in a
+:class:`~repro.dvfs.governors.StaticPlanGovernor` via the lossless IR
+converters and inherit everything else (hooks, metering, summary,
+checkpoint state) unchanged.  New code should use
+:class:`~repro.dvfs.DvfsSession` (or construct the governor executors
+directly); constructing these shims emits a :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
-from ..core.coalesce import SWITCH_POWER_W
-from ..core.freq import AUTO, ClockPair
-from ..core.objectives import pct
-from ..core.phase_plan import PhasePlan, PhasePlanBundle, TrainPlanBundle
+from ..core.phase_plan import PhasePlanBundle, TrainPlanBundle
 from ..core.power_model import Chip
-from .energy import EnergyMeter, FrequencyController, SimulatedController, \
-    StepEnergy
+from ..dvfs.executor import ServeGovernorExecutor, TrainGovernorExecutor
+from ..dvfs.governors import StaticPlanGovernor
+from ..dvfs.plan_ir import DvfsPlan
+from .energy import FrequencyController
 
 
-class _BundleExecutor:
-    """Shared replay + accounting machinery over a dict of PhasePlans."""
-
-    def __init__(self, phases: Dict[str, PhasePlan], chip: Chip,
-                 controller: Optional[FrequencyController] = None,
-                 bundle_chip_name: Optional[str] = None):
-        if bundle_chip_name is not None and bundle_chip_name != chip.name:
-            raise ValueError(f"bundle planned for {bundle_chip_name!r}, "
-                             f"executing on {chip.name!r}")
-        self.chip = chip
-        self.controller = controller or SimulatedController(chip)
-        self.meters: Dict[str, EnergyMeter] = {}
-        self.baseline: Dict[str, EnergyMeter] = {}
-        self.switches: Dict[str, int] = {}
-        self._steps: Dict[str, int] = {}
-        self._phases = phases
-        for name, plan in phases.items():
-            self.meters[name] = EnergyMeter(chip, plan.kernels,
-                                            plan.schedule)
-            self.baseline[name] = EnergyMeter(chip, plan.kernels, None)
-            self.switches[name] = 0
-            self._steps[name] = 0
-
-    def reset(self) -> None:
-        """Clear accumulated accounting (per-phase records, switch counts)
-        so a warm-up workload does not pollute a measured one."""
-        for name in self.meters:
-            self.meters[name].records.clear()
-            self.baseline[name].records.clear()
-            self.switches[name] = 0
-            self._steps[name] = 0
-        self.controller.reset()
-
-    def finish(self) -> None:
-        """Return the chip to the governor (auto) clocks."""
-        self.controller.reset()
-
-    def _execute(self, name: str, plan: PhasePlan) -> StepEnergy:
-        sw0 = getattr(self.controller, "n_switches", 0)
-        for entry in plan.schedule.entries:
-            self.controller.set_clocks(ClockPair(entry.mem, entry.core))
-        self.switches[name] += getattr(self.controller, "n_switches",
-                                       sw0) - sw0
-        step = self._steps[name]
-        rec = self.meters[name].on_step(step)
-        self.baseline[name].on_step(step)
-        self._steps[name] = step + 1
-        return rec
-
-    # -- reporting -------------------------------------------------------
-    def summary(self) -> Dict:
-        """Per-phase and total executed time/energy vs the auto baseline,
-        with per-phase switch counts."""
-        phases = {}
-        tot = {"steps": 0, "time_s": 0.0, "energy_j": 0.0,
-               "base_time_s": 0.0, "base_energy_j": 0.0, "n_switches": 0}
-        for name in self.meters:
-            m = self.meters[name].totals()
-            b = self.baseline[name].totals()
-            row = {"steps": int(m["steps"]),
-                   "time_s": m["time_s"], "energy_j": m["energy_j"],
-                   "base_time_s": b["time_s"],
-                   "base_energy_j": b["energy_j"],
-                   "n_switches": self.switches[name]}
-            # the meter charges the schedule's *internal* switches; phase-
-            # boundary transitions (observed at the controller) are extra
-            sched = self.meters[name].schedule
-            internal = (sched.n_switches if sched is not None else 0) \
-                * row["steps"]
-            extra = max(row["n_switches"] - internal, 0)
-            row["time_s"] += extra * self.chip.switch_latency_s
-            row["energy_j"] += extra * self.chip.switch_latency_s \
-                * SWITCH_POWER_W
-            if b["energy_j"] > 0:
-                row["time_pct"] = pct(m["time_s"], b["time_s"])
-                row["energy_pct"] = pct(m["energy_j"], b["energy_j"])
-            phases[name] = row
-            tot["steps"] += row["steps"]
-            tot["time_s"] += row["time_s"]
-            tot["energy_j"] += row["energy_j"]
-            tot["base_time_s"] += row["base_time_s"]
-            tot["base_energy_j"] += row["base_energy_j"]
-            tot["n_switches"] += row["n_switches"]
-        if tot["base_energy_j"] > 0:
-            tot["time_pct"] = pct(tot["time_s"], tot["base_time_s"])
-            tot["energy_pct"] = pct(tot["energy_j"], tot["base_energy_j"])
-        return {"chip": self.chip.name, "phases": phases, "totals": tot}
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.runtime.dvfs_exec.{old} is deprecated; use "
+                  f"{new} from repro.dvfs instead",
+                  DeprecationWarning, stacklevel=3)
 
 
-class PhaseExecutor(_BundleExecutor):
-    """Replays a PhasePlanBundle around serve-engine phase transitions."""
+class PhaseExecutor(ServeGovernorExecutor):
+    """Deprecated shim: replays a PhasePlanBundle around serve phases."""
 
     def __init__(self, bundle: PhasePlanBundle, chip: Chip,
                  controller: Optional[FrequencyController] = None):
-        super().__init__(bundle.phases(), chip, controller,
-                         bundle_chip_name=bundle.chip_name)
+        _deprecated("PhaseExecutor",
+                    "DvfsSession.serve_executor() / ServeGovernorExecutor")
+        gov = StaticPlanGovernor(DvfsPlan.from_phase_bundle(bundle))
+        super().__init__(gov, chip, controller)
         self.bundle = bundle
 
-    # -- phase hooks -----------------------------------------------------
-    def on_prefill(self) -> None:
-        self._execute("prefill", self.bundle.prefill)
 
-    def on_decode(self, n_active: int) -> None:
-        b = self.bundle.decode_bucket(max(n_active, 1))
-        self._execute(f"decode@{b}", self.bundle.decode[b])
-
-
-class TrainPhaseExecutor(_BundleExecutor):
-    """Replays a TrainPlanBundle around every optimizer step."""
+class TrainPhaseExecutor(TrainGovernorExecutor):
+    """Deprecated shim: replays a TrainPlanBundle around train steps."""
 
     def __init__(self, bundle: TrainPlanBundle, chip: Chip,
                  controller: Optional[FrequencyController] = None):
-        super().__init__({n: bundle.phases[n]
-                          for n in bundle.phase_names()}, chip, controller,
-                         bundle_chip_name=bundle.chip_name)
+        _deprecated("TrainPhaseExecutor",
+                    "DvfsSession.train_executor() / TrainGovernorExecutor")
+        gov = StaticPlanGovernor(DvfsPlan.from_train_bundle(bundle))
+        super().__init__(gov, chip, controller)
         self.bundle = bundle
-        self.last_step: Optional[int] = None
-
-    # -- step hook -------------------------------------------------------
-    def on_step(self, step: int) -> StepEnergy:
-        """Execute one train step's fwd -> bwd -> opt phase schedules.
-
-        Returns the step's combined simulated time/energy (switch overhead
-        internal to each phase schedule included; phase-boundary switches
-        are accounted in :meth:`summary`).
-        """
-        t = e = 0.0
-        n_sw = 0
-        for name in self.bundle.phase_names():
-            rec = self._execute(name, self.bundle.phases[name])
-            t += rec.time_s
-            e += rec.energy_j
-            n_sw += rec.n_switches
-        self.last_step = step
-        return StepEnergy(step=step, time_s=t, energy_j=e, n_switches=n_sw)
-
-    # -- checkpoint-resume ----------------------------------------------
-    def state_dict(self) -> Dict:
-        """Accounting state for checkpointing (the records themselves are
-        analytic per-step constants, so counts reconstruct them exactly)."""
-        return {"steps": dict(self._steps),
-                "switches": dict(self.switches),
-                "last_step": self.last_step}
-
-    def load_state_dict(self, state: Dict) -> None:
-        """Resume accounting mid-plan after a checkpoint restart."""
-        self.reset()
-        for name, n in state.get("steps", {}).items():
-            if name not in self.meters:
-                continue
-            for i in range(int(n)):
-                self.meters[name].on_step(i)
-                self.baseline[name].on_step(i)
-            self._steps[name] = int(n)
-        for name, n in state.get("switches", {}).items():
-            if name in self.switches:
-                self.switches[name] = int(n)
-        self.last_step = state.get("last_step")

@@ -34,10 +34,13 @@ All jitted entry points donate the cache (and the slot vectors), so
 device buffers update in place; jitted callables are memoized per
 (chunk-len | prompt-bucket) and surfaced via :attr:`compile_stats`.
 
-When given a :class:`~repro.runtime.dvfs_exec.PhaseExecutor`, the engine
-replays the offline :class:`~repro.core.phase_plan.PhasePlanBundle` around
-every phase transition (prefill vs decode, bucketed by active-slot count)
-— the plan → runtime loop, closed.
+When given a :class:`~repro.dvfs.ServeGovernorExecutor` (usually from
+:meth:`~repro.dvfs.DvfsSession.serve_executor`; the legacy
+``PhaseExecutor`` shim also qualifies), the engine replays the governor's
+:class:`~repro.dvfs.DvfsPlan` around every phase transition (prefill vs
+decode, bucketed by active-slot count) — the plan → runtime loop, closed.
+An :class:`~repro.dvfs.OnlineGovernor` additionally re-plans the decode
+segments when the observed bucket mix drifts from the planned one.
 """
 from __future__ import annotations
 

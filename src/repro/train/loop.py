@@ -12,11 +12,13 @@ DVFS integration comes in two tiers:
   :class:`~repro.runtime.energy.EnergyMeter` integrates the analytic
   time/energy of a fixed schedule each step (no actuation);
 * ``executor`` — active execution: a
-  :class:`~repro.runtime.dvfs_exec.TrainPhaseExecutor` *actuates* the
-  planned clocks around every step, replaying the
-  :class:`~repro.core.phase_plan.TrainPlanBundle`'s ``fwd``/``bwd``/``opt``
-  schedules through a ``FrequencyController`` and metering each phase
-  against its auto-governor twin.
+  :class:`~repro.dvfs.TrainGovernorExecutor` (usually built with
+  :meth:`~repro.dvfs.DvfsSession.train_executor`; the legacy
+  ``TrainPhaseExecutor`` shim also qualifies) *actuates* the planned
+  clocks around every step, replaying the governor's
+  :class:`~repro.dvfs.DvfsPlan` ``fwd``/``bwd``/``opt`` segments through
+  a ``FrequencyController`` backend and metering each phase against its
+  auto-governor twin.
 
 The executor composes with fault tolerance: its accounting state is
 checkpointed alongside model state (``extra["dvfs_exec"]``) and restored
@@ -37,7 +39,7 @@ import numpy as np
 
 from ..ckpt import CheckpointManager
 from ..data import DataPipeline
-from ..runtime.dvfs_exec import TrainPhaseExecutor
+from ..dvfs.executor import TrainGovernorExecutor
 from ..runtime.energy import EnergyMeter
 from ..runtime.ft import FailureInjector, InjectedFailure, StragglerWatchdog
 from .step import TrainState, init_train_state
@@ -55,7 +57,7 @@ class Trainer:
     def __init__(self, model, train_step: Callable, pipeline: DataPipeline,
                  ckpt: CheckpointManager, cfg: TrainerConfig,
                  energy_meter: Optional[EnergyMeter] = None,
-                 executor: Optional[TrainPhaseExecutor] = None,
+                 executor: Optional[TrainGovernorExecutor] = None,
                  failure_injector: Optional[FailureInjector] = None,
                  seed: int = 0):
         self.model = model

@@ -1,0 +1,510 @@
+"""The unified DVFS governor API: plan IR round-trip + versioning,
+governor/controller registries, legacy-bundle conversion parity, executor
+adapters vs the legacy shims, and the OnlineGovernor drift -> re-plan ->
+recovery loop on a synthetic bucket-mix shift."""
+import copy
+import json
+
+import pytest
+
+from repro.configs import REGISTRY, get_config, get_shape
+from repro.configs.base import ShapeConfig
+from repro.core import (Campaign, PhasePlanBundle, TrainPlanBundle,
+                        WastePolicy, WorkloadBuilder, compile_phase,
+                        decode_slot_buckets, get_chip, plan_phase_bundle,
+                        plan_train_bundle)
+from repro.core.freq import AUTO, ClockPair
+from repro.dvfs import (SCHEMA_VERSION, DvfsPlan, DvfsSession,
+                        OnlineGovernor, PlanSegment, RateLimitedController,
+                        ServeGovernorExecutor, StaticPlanGovernor,
+                        TrainGovernorExecutor, controller, governor,
+                        plan_decode_joint, validate_plan_dict)
+
+CHIP = get_chip("tpu-v5e")
+TAU = 0.006
+
+
+@pytest.fixture(scope="module")
+def serve_bundle():
+    cfg = REGISTRY["llama3.2-1b"]
+    pre = ShapeConfig(name="p", seq_len=256, global_batch=1,
+                      kind="prefill")
+    dec = ShapeConfig(name="d", seq_len=256, global_batch=4, kind="decode")
+    return plan_phase_bundle(cfg, CHIP, n_slots=4, prefill_shape=pre,
+                             decode_shape=dec, policy=WastePolicy(TAU),
+                             n_reps=3)
+
+
+@pytest.fixture(scope="module")
+def train_bundle():
+    return plan_train_bundle(get_config("gpt3-xl"), CHIP,
+                             shape=get_shape("paper_gpt3xl"),
+                             policy=WastePolicy(TAU), n_reps=3)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+def test_governor_registry_lookup():
+    assert isinstance(governor("kernel-static"), StaticPlanGovernor)
+    assert governor("pass-level", aggregation="local").aggregation \
+        == "local"
+    assert governor("edp", level="pass").level == "pass"
+    assert isinstance(governor("online"), OnlineGovernor)
+
+
+def test_governor_registry_unknown_name():
+    with pytest.raises(ValueError, match="unknown governor"):
+        governor("thermal-psychic")
+    # the error lists the registered names, so typos are self-diagnosing
+    with pytest.raises(ValueError, match="kernel-static"):
+        governor("nope")
+
+
+def test_controller_registry():
+    assert controller("simulated", CHIP).switch_latency_s \
+        == CHIP.switch_latency_s
+    assert isinstance(controller("rate-limited", CHIP),
+                      RateLimitedController)
+    with pytest.raises(ValueError, match="unknown controller"):
+        controller("nvml", CHIP)
+
+
+# ---------------------------------------------------------------------------
+# Plan IR: JSON round-trip + versioning + validation
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip(serve_bundle):
+    plan = DvfsPlan.from_phase_bundle(serve_bundle)
+    plan2 = DvfsPlan.from_json(plan.to_json())
+    assert plan2.schema_version == SCHEMA_VERSION
+    assert plan2.kind == "serve"
+    assert plan2.segment_names() == plan.segment_names()
+    assert plan2.summary() == plan.summary()
+    assert plan2.time_s == plan.time_s
+    assert plan2.energy_j == plan.energy_j
+    for a, b in zip(plan.segments, plan2.segments):
+        assert (a.granularity, a.scope, a.bucket) \
+            == (b.granularity, b.scope, b.bucket)
+        assert a.kernels == b.kernels
+
+
+def test_plan_rejects_future_schema(serve_bundle):
+    d = DvfsPlan.from_phase_bundle(serve_bundle).to_dict()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema"):
+        DvfsPlan.from_dict(d)
+    assert any("newer" in e for e in validate_plan_dict(d))
+
+
+def test_validate_plan_dict(serve_bundle):
+    good = DvfsPlan.from_phase_bundle(serve_bundle).to_dict()
+    assert validate_plan_dict(good) == []
+    bad = copy.deepcopy(good)
+    bad["kind"] = "snack"
+    bad["segments"][0].pop("kernels")
+    bad["segments"][1]["scope"] = "serve-dessert"
+    errs = validate_plan_dict(bad)
+    assert any("kind" in e for e in errs)
+    assert any("kernels" in e for e in errs)
+    assert any("scope" in e for e in errs)
+
+
+def test_ir_tags_and_bucket_lookup(serve_bundle):
+    plan = DvfsPlan.from_phase_bundle(serve_bundle)
+    assert plan.segment("prefill").scope == "serve-prefill"
+    decode = [s for s in plan.segments if s.scope == "serve-decode"]
+    assert [s.bucket for s in decode] == decode_slot_buckets(4)
+    assert plan.decode_bucket(3) == serve_bundle.decode_bucket(3)
+    assert plan.decode_segment(3).name \
+        == f"decode@{serve_bundle.decode_bucket(3)}"
+
+
+# ---------------------------------------------------------------------------
+# Legacy-bundle <-> IR conversion parity (lossless)
+# ---------------------------------------------------------------------------
+
+def test_serve_bundle_conversion_parity(serve_bundle, tmp_path):
+    ir = DvfsPlan.from_phase_bundle(serve_bundle)
+    back = ir.to_phase_bundle()
+    for name, p in serve_bundle.phases().items():
+        q = back.phases()[name]
+        assert q.energy_j == p.energy_j
+        assert q.time_s == p.time_s
+        assert q.schedule.to_json() == p.schedule.to_json()
+    # the bundle's own save/load now routes through the IR wire format
+    path = str(tmp_path / "b.json")
+    serve_bundle.save(path)
+    with open(path) as f:
+        assert json.load(f)["schema_version"] == SCHEMA_VERSION
+    b2 = PhasePlanBundle.load(path)
+    assert b2.summary() == serve_bundle.summary()
+
+
+def test_train_bundle_conversion_parity(train_bundle, tmp_path):
+    ir = DvfsPlan.from_train_bundle(train_bundle)
+    assert ir.kind == "train"
+    assert ir.time_s == train_bundle.step_time_s
+    assert ir.energy_j == train_bundle.step_energy_j
+    back = ir.to_train_bundle()
+    assert back.to_json() == train_bundle.to_json()
+    path = str(tmp_path / "t.json")
+    train_bundle.save(path)
+    assert TrainPlanBundle.load(path).summary() == train_bundle.summary()
+
+
+def test_legacy_wire_format_still_loads(train_bundle):
+    """Pre-IR artifacts (no schema_version/segments keys) keep loading."""
+    legacy = json.dumps({
+        "chip": train_bundle.chip_name,
+        "meta": train_bundle.meta,
+        "phases": {n: p.to_dict() for n, p in train_bundle.phases.items()},
+    })
+    b = TrainPlanBundle.from_json(legacy)
+    assert b.summary() == train_bundle.summary()
+
+
+# ---------------------------------------------------------------------------
+# Executor adapters: new vs legacy shim parity, deprecation, controllers
+# ---------------------------------------------------------------------------
+
+def test_train_executor_matches_legacy_shim(train_bundle):
+    from repro.runtime import TrainPhaseExecutor
+    with pytest.warns(DeprecationWarning, match="dvfs"):
+        old = TrainPhaseExecutor(train_bundle, CHIP)
+    new = TrainGovernorExecutor.from_bundle(train_bundle, CHIP)
+    for s in range(4):
+        assert old.on_step(s) == new.on_step(s)
+    old.finish(), new.finish()
+    assert old.summary() == new.summary()
+    # checkpoint books round-trip identically
+    resumed = TrainGovernorExecutor.from_bundle(train_bundle, CHIP)
+    resumed.load_state_dict(new.state_dict())
+    assert resumed.summary()["totals"] == new.summary()["totals"]
+
+
+def test_executor_state_dict_survives_replan_carry(train_bundle):
+    """Books flushed into the carry by a mid-run plan adoption must
+    survive checkpoint-restart, not just the current-revision counts."""
+    gov = StaticPlanGovernor(DvfsPlan.from_train_bundle(train_bundle))
+    ex = TrainGovernorExecutor(gov, CHIP)
+    for s in range(3):
+        ex.on_step(s)
+    gov.adopt(DvfsPlan.from_train_bundle(train_bundle), reason="swap")
+    for s in range(3, 5):
+        ex.on_step(s)                  # flushes pre-adopt books to carry
+    resumed = TrainGovernorExecutor(
+        StaticPlanGovernor(DvfsPlan.from_train_bundle(train_bundle)),
+        CHIP)
+    resumed.load_state_dict(ex.state_dict())
+    a, b = ex.summary()["totals"], resumed.summary()["totals"]
+    assert a["steps"] == b["steps"] == 15        # 5 steps x 3 phases
+    assert abs(a["energy_j"] - b["energy_j"]) < 1e-9
+    assert abs(a["time_s"] - b["time_s"]) < 1e-9
+
+
+def test_serve_executor_matches_legacy_shim(serve_bundle):
+    from repro.runtime import PhaseExecutor
+    with pytest.warns(DeprecationWarning, match="dvfs"):
+        old = PhaseExecutor(serve_bundle, CHIP)
+    new = ServeGovernorExecutor.from_bundle(serve_bundle, CHIP)
+    for ex in (old, new):
+        ex.on_prefill()
+        for n in (1, 2, 3, 4, 4, 1):
+            ex.on_decode(n)
+        ex.finish()
+    assert old.summary() == new.summary()
+
+
+def test_executor_rejects_wrong_chip(train_bundle):
+    gov = StaticPlanGovernor(DvfsPlan.from_train_bundle(train_bundle))
+    with pytest.raises(ValueError, match="planned for"):
+        TrainGovernorExecutor(gov, get_chip("rtx3080ti"))
+
+
+def test_rate_limited_controller_quantizes_and_throttles():
+    ctl = RateLimitedController(CHIP, min_interval_s=1.0)
+    grid = CHIP.grid
+    # off-grid request snaps to the nearest table entry
+    ctl.set_clocks(ClockPair(grid.mem_clocks_mhz[0] + 7.0,
+                             grid.core_clocks_mhz[0] + 11.0))
+    assert ctl.current == ClockPair(grid.mem_clocks_mhz[0],
+                                    grid.core_clocks_mhz[0])
+    assert ctl.n_quantized == 2 and ctl.n_switches == 1
+    # a second switch inside the interval is refused: clocks stay put
+    ctl.set_clocks(ClockPair(grid.mem_clocks_mhz[1],
+                             grid.core_clocks_mhz[1]))
+    assert ctl.n_throttled == 1 and ctl.n_switches == 1
+    ctl.advance(2.0)          # modeled time passes the interval
+    ctl.set_clocks(ClockPair(grid.mem_clocks_mhz[1],
+                             grid.core_clocks_mhz[1]))
+    assert ctl.n_switches == 2
+    ctl.reset()               # release always succeeds
+    assert ctl.current == ClockPair(AUTO, AUTO)
+
+
+def test_rate_limited_executor_realizes_fewer_switches(train_bundle):
+    free = TrainGovernorExecutor.from_bundle(train_bundle, CHIP)
+    lim = TrainGovernorExecutor.from_bundle(
+        train_bundle, CHIP,
+        controller=RateLimitedController(CHIP, min_interval_s=1e-2))
+    for s in range(3):
+        free.on_step(s), lim.on_step(s)
+    n_free = free.summary()["totals"]["n_switches"]
+    n_lim = lim.summary()["totals"]["n_switches"]
+    assert n_lim < n_free
+    assert lim.summary()["n_throttled"] > 0
+
+
+# ---------------------------------------------------------------------------
+# DvfsSession facade
+# ---------------------------------------------------------------------------
+
+def test_session_train_reproduces_legacy_pipeline(train_bundle):
+    with DvfsSession(chip=CHIP, tau=TAU, n_reps=3) as sess:
+        plan = sess.plan_train(get_config("gpt3-xl"),
+                               shape=get_shape("paper_gpt3xl"))
+        ex = sess.train_executor()
+        for s in range(3):
+            ex.on_step(s)
+        report = sess.report()
+    # same campaign seed + planner => bit-identical schedules
+    for ph, p in train_bundle.phases.items():
+        assert plan.segment(ph).schedule.to_json() == p.schedule.to_json()
+    assert report["governor"] == "kernel-static"
+    assert report["executed"][0]["totals"]["steps"] == 9
+    assert report["plan"]["phases"].keys() \
+        == train_bundle.summary()["phases"].keys()
+
+
+def test_session_governor_kwargs_and_exclusive_policy():
+    with pytest.raises(ValueError, match="not both"):
+        DvfsSession(policy=WastePolicy(0.0), tau=0.1)
+    sess = DvfsSession(governor="pass-level", aggregation="local")
+    assert sess.governor.aggregation == "local"
+
+
+def test_static_local_aggregation_reaches_phase_path(train_bundle):
+    """aggregation='local' must shape plan_train/plan_serve, not just
+    solve(): the compiled phases carry the local per-kernel planner."""
+    with DvfsSession(chip=CHIP, tau=TAU, n_reps=3,
+                     aggregation="local") as sess:
+        plan = sess.plan_train(get_config("gpt3-xl"),
+                               shape=get_shape("paper_gpt3xl"))
+    for seg in plan.segments:
+        assert seg.schedule.meta["plan"] == "kernel-local"
+    # and the default (global) still compiles switch-aware coalesced
+    assert train_bundle.phases["fwd"].schedule.meta["plan"] \
+        == "coalesced-global"
+
+
+def test_session_online_governor_end_to_end():
+    """governor='online' by name: the session wires chip + a fresh
+    decode-table provider, so a drift-triggered re-plan on the serving
+    hot path works instead of raising."""
+    cfg = REGISTRY["llama3.2-1b"]
+    pre = ShapeConfig(name="p", seq_len=256, global_batch=1,
+                      kind="prefill")
+    dec = ShapeConfig(name="d", seq_len=256, global_batch=4, kind="decode")
+    with DvfsSession(chip=CHIP, tau=0.01, n_reps=2, governor="online",
+                     window=16, mix_threshold=0.2) as sess:
+        sess.plan_serve(cfg, n_slots=4, prefill_shape=pre,
+                        decode_shape=dec)
+        ex = sess.serve_executor()
+        for _ in range(20):          # first window -> reference mix
+            ex.on_decode(4)
+        for _ in range(40):          # drifted traffic
+            ex.on_decode(1)
+        report = sess.report()
+    assert sess.governor.revision > 2      # plan_serve adopt + replan
+    assert report["governor_events"]
+    assert report["executed"][0]["totals"]["steps"] == 60
+
+
+def test_online_governor_adopt_anchors_reference_mix(decode_tables):
+    """A plan adopted after construction (e.g. loaded from disk) must
+    bring its recorded decode_mix along as the drift reference."""
+    policy = WastePolicy(0.01)
+    gov = OnlineGovernor(policy=policy, chip=CHIP, tables=decode_tables,
+                         window=16)
+    plan = DvfsPlan.from_json(
+        _serve_plan(decode_tables, PLANNED_MIX, policy).to_json())
+    gov.adopt(plan)
+    tot = sum(PLANNED_MIX.values())
+    assert gov._ref_mix == {b: f / tot for b, f in PLANNED_MIX.items()}
+    # already-drifted traffic is then caught within one window
+    ex = ServeGovernorExecutor(gov, CHIP)
+    for _ in range(20):
+        ex.on_decode(2)
+    assert any(any(r.startswith("mix-drift") for r in e["reason"])
+               for e in gov.events if "reason" in e)
+
+
+# ---------------------------------------------------------------------------
+# OnlineGovernor: drift detection -> joint re-plan -> energy recovery
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def decode_tables():
+    cfg = REGISTRY["llama3.2-1b"]
+    dec = ShapeConfig(name="d", seq_len=512, global_batch=4, kind="decode")
+    camp = Campaign(CHIP, seed=0, n_reps=3)
+    return {b: camp.run(WorkloadBuilder(cfg, dec, batch_override=b).build())
+            for b in decode_slot_buckets(4)}
+
+
+def _serve_plan(decode_tables, mix, policy):
+    segs = plan_decode_joint(decode_tables, mix, CHIP, policy)
+    prefill = PlanSegment.from_phase_plan(
+        compile_phase(decode_tables[1], "prefill", CHIP, policy),
+        scope="serve-prefill")
+    return DvfsPlan(chip_name=CHIP.name, kind="serve",
+                    segments=[prefill] + segs,
+                    meta={"decode_mix": dict(mix)})
+
+
+# deterministic drifted traffic: a 16-step pattern whose empirical mix
+# {1: 2/16, 2: 13/16, 4: 1/16} sits far (TV ~ 0.51) from the planned mix
+# below, concentrated on the bucket the stale plan gave the least slack —
+# so the stale plan under-spends the aggregate budget and strands energy
+PLANNED_MIX = {1: 0.30, 2: 0.30, 4: 0.40}
+DRIFT_PATTERN = [1] * 2 + [2] * 13 + [4]
+DRIFT_MIX = {1: 2 / 16, 2: 13 / 16, 4: 1 / 16}
+WINDOW = 32
+N_STEPS = 10 * WINDOW
+
+
+def _drive(executor, n=N_STEPS):
+    for i in range(n):
+        executor.on_decode(DRIFT_PATTERN[i % len(DRIFT_PATTERN)])
+    executor.finish()
+    return executor.summary()["totals"]
+
+
+def test_online_governor_replans_on_mix_shift(decode_tables):
+    policy = WastePolicy(0.01)
+    plan = _serve_plan(decode_tables, PLANNED_MIX, policy)
+    stale_sched = {s.name: s.schedule.to_json() for s in plan.segments}
+    gov = OnlineGovernor(plan, policy=policy, chip=CHIP,
+                         tables=decode_tables, window=WINDOW)
+    ex = ServeGovernorExecutor(gov, CHIP)
+    online = _drive(ex)
+
+    # drift was detected and a re-plan adopted
+    assert gov.revision > 1
+    assert any(any(r.startswith("mix-drift") for r in e["reason"])
+               for e in gov.events if "reason" in e)
+    # decode segments were actually re-planned; prefill untouched
+    assert gov.plan.segment("prefill").schedule.to_json() \
+        == stale_sched["prefill"]
+    assert any(gov.plan.segment(n).schedule.to_json() != stale_sched[n]
+               for n in stale_sched if n.startswith("decode@"))
+    # the executor carried pre-replan books across the meter swap
+    assert online["steps"] == N_STEPS
+    assert ex.summary().get("governor_revision") == gov.revision
+
+    # -- energy recovery vs the stale plan and the oracle ----------------
+    stale = ServeGovernorExecutor(StaticPlanGovernor(
+        _serve_plan(decode_tables, PLANNED_MIX, policy)), CHIP)
+    oracle = ServeGovernorExecutor(StaticPlanGovernor(
+        _serve_plan(decode_tables, DRIFT_MIX, policy)), CHIP)
+    stale_tot = _drive(stale)
+    oracle_tot = _drive(oracle)
+
+    gap = stale_tot["energy_j"] - oracle_tot["energy_j"]
+    assert gap > 0, "drift must leave a real energy gap to recover"
+    recovered = stale_tot["energy_j"] - online["energy_j"]
+    assert recovered >= 0.5 * gap, \
+        f"recovered {recovered:.3f} J of a {gap:.3f} J gap"
+    # and the re-planned operating point respects the planned time budget
+    # (phase-boundary switches observed at the controller are accounted
+    # on top, as in every executor summary)
+    t_fresh = sum(DRIFT_MIX[s.bucket] * s.time_s
+                  for s in gov.plan.segments if s.bucket is not None)
+    t_base = sum(DRIFT_MIX[b] * decode_tables[b].baseline_totals()[0]
+                 for b in DRIFT_MIX)
+    assert t_fresh <= (1 + policy.tau) * t_base * (1 + 1e-6)
+
+
+def test_online_governor_perf_drift_channel(decode_tables):
+    """Measured-vs-planned deviation (hardware counters disagreeing with
+    the plan) also triggers a re-plan, via the executor's measure_fn."""
+    policy = WastePolicy(0.01)
+    plan = _serve_plan(decode_tables, PLANNED_MIX, policy)
+    gov = OnlineGovernor(plan, policy=policy, chip=CHIP,
+                         tables=decode_tables, window=WINDOW,
+                         perf_threshold=0.02, min_perf_obs=4)
+    seg = plan.segment("decode@4")
+    # counters read 8% hotter than planned
+    ex = ServeGovernorExecutor(
+        gov, CHIP, measure_fn=lambda name: (
+            gov.plan.segment(name).time_s * 1.08,
+            gov.plan.segment(name).energy_j * 1.08))
+    for _ in range(8):
+        ex.on_decode(4)
+    assert gov.revision > 1
+    assert any(any(r.startswith("perf-drift") for r in e["reason"])
+               for e in gov.events if "reason" in e)
+
+
+def test_renamed_prefill_round_trips_and_executes(decode_tables):
+    """Prefill segments are found by scope, not by the name 'prefill' —
+    a bundle with a custom prefill name must save/load and execute."""
+    policy = WastePolicy(0.01)
+    bundle = PhasePlanBundle(
+        chip_name=CHIP.name,
+        prefill=compile_phase(decode_tables[1], "prefill_ctx", CHIP,
+                              policy),
+        decode={1: compile_phase(decode_tables[1], "decode@1", CHIP,
+                                 policy)})
+    b2 = PhasePlanBundle.from_json(bundle.to_json())
+    assert b2.prefill.name == "prefill_ctx"
+    ex = ServeGovernorExecutor.from_bundle(bundle, CHIP)
+    ex.on_prefill()
+    ex.finish()
+    assert ex.summary()["phases"]["prefill_ctx"]["steps"] == 1
+
+
+def test_online_prefill_perf_drift_does_not_loop(decode_tables):
+    """Perf drift on a segment replan() cannot rebuild (prefill) must
+    not trigger endless decode re-measurement — it is surfaced once."""
+    policy = WastePolicy(0.01)
+    gov = OnlineGovernor(_serve_plan(decode_tables, PLANNED_MIX, policy),
+                         policy=policy, chip=CHIP, tables=decode_tables,
+                         window=8, perf_threshold=0.02, min_perf_obs=2)
+    ex = ServeGovernorExecutor(
+        gov, CHIP, measure_fn=lambda n: (
+            gov.plan.segment(n).time_s * 1.05,
+            gov.plan.segment(n).energy_j * 1.05))
+    for _ in range(6):
+        ex.on_prefill()
+    assert gov.revision == 1          # no decode re-plan fired
+    noted = [e for e in gov.events if e.get("replan") == "no-target"]
+    assert len(noted) == 1            # surfaced exactly once
+
+
+def test_online_governor_degrades_without_tables(decode_tables):
+    """Drift on a plan with no tables wired (e.g. adopted from disk into
+    a bare governor) must not raise out of the serving hot path — it
+    records the unactionable drift and keeps serving the stale plan."""
+    policy = WastePolicy(0.01)
+    gov = OnlineGovernor(policy=policy, chip=CHIP, window=8)
+    gov.adopt(_serve_plan(decode_tables, PLANNED_MIX, policy))
+    ex = ServeGovernorExecutor(gov, CHIP)
+    for _ in range(12):
+        ex.on_decode(2)               # drifted vs the planned mix
+    assert gov.revision == 1          # no re-plan happened...
+    assert any(e.get("replan") == "unavailable" for e in gov.events)
+    assert ex.summary()["totals"]["steps"] == 12
+
+
+def test_plan_decode_joint_respects_aggregate_budget(decode_tables):
+    policy = WastePolicy(0.01)
+    for mix in (PLANNED_MIX, DRIFT_MIX):
+        segs = {s.bucket: s for s in
+                plan_decode_joint(decode_tables, mix, CHIP, policy)}
+        t = sum(mix[b] * segs[b].time_s for b in mix)
+        t_base = sum(mix[b] * decode_tables[b].baseline_totals()[0]
+                     for b in mix)
+        assert t <= (1 + policy.tau) * t_base * (1 + 1e-6)

@@ -11,7 +11,11 @@ Checks all ``docs/*.md`` files:
     - ``python examples/<file>.py`` with the file present,
     - ``make <target>`` with the target defined in the Makefile;
 * ``[[path]]`` artifact references — the path must exist in the working
-  tree or be gitignored (artifacts are build products, not tracked).
+  tree or be gitignored (artifacts are build products, not tracked);
+* fenced ``json`` blocks that carry a ``schema_version`` key — validated
+  as :class:`repro.dvfs.DvfsPlan` documents against the IR schema
+  (``repro.dvfs.validate_plan_dict``), so the plan examples embedded in
+  the docs cannot drift from the wire format the loaders accept.
 
 Run:  PYTHONPATH=src python tools/docs_check.py      (or: make docs-check)
 Exits non-zero listing every stale command/reference, so drifting docs
@@ -20,6 +24,7 @@ fail CI instead of rotting.
 from __future__ import annotations
 
 import glob
+import json
 import os
 import re
 import shlex
@@ -36,6 +41,12 @@ def _registry():
     sys.path.insert(0, ROOT)
     from benchmarks.run import REGISTRY
     return set(REGISTRY)
+
+
+def _plan_validator():
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.dvfs import validate_plan_dict
+    return validate_plan_dict
 
 
 def _make_targets():
@@ -58,18 +69,42 @@ def _gitignored(path: str) -> bool:
         return path.startswith("artifacts")
 
 
-def _iter_commands(text: str):
-    """Yield (lineno, command) for each line of each ``bash`` fence."""
-    fence_lang = None
+def _iter_fenced(text: str, langs):
+    """Yield (start_lineno, [lines]) for each fence in ``langs``.
+
+    An unterminated fence at EOF is still yielded — a truncated doc must
+    not silently exempt its commands/plans from checking.
+    """
+    fence_lang, start, buf = None, 0, []
     for i, line in enumerate(text.splitlines(), 1):
         m = FENCE_RE.match(line.strip())
         if m:
-            fence_lang = None if fence_lang is not None else m.group(1)
+            if fence_lang is not None:
+                if fence_lang in langs:
+                    yield start, buf
+                fence_lang, buf = None, []
+            else:
+                fence_lang, start = m.group(1), i
             continue
-        if fence_lang in ("bash", "sh", "shell"):
+        if fence_lang in langs:
+            buf.append(line)
+    if fence_lang in langs:
+        yield start, buf
+
+
+def _iter_commands(text: str):
+    """Yield (lineno, command) for each line of each ``bash`` fence."""
+    for start, lines in _iter_fenced(text, ("bash", "sh", "shell")):
+        for off, line in enumerate(lines, 1):
             cmd = line.strip()
             if cmd and not cmd.startswith("#"):
-                yield i, cmd
+                yield start + off, cmd
+
+
+def _iter_json_blocks(text: str):
+    """Yield (lineno, raw_text) for each fenced ``json`` block."""
+    for start, lines in _iter_fenced(text, ("json",)):
+        yield start, "\n".join(lines)
 
 
 def check_command(cmd: str, registry, make_targets):
@@ -115,8 +150,9 @@ def main() -> int:
         return 1
     registry = _registry()
     make_targets = _make_targets()
+    validate_plan = _plan_validator()
     errors = []
-    n_cmds = n_refs = 0
+    n_cmds = n_refs = n_plans = 0
     for doc in docs:
         rel = os.path.relpath(doc, ROOT)
         with open(doc) as f:
@@ -126,7 +162,24 @@ def main() -> int:
             err = check_command(cmd, registry, make_targets)
             if err:
                 errors.append(f"{rel}:{lineno}: {err}\n    {cmd}")
-        for m in ARTIFACT_RE.finditer(text):
+        for lineno, raw in _iter_json_blocks(text):
+            try:
+                obj = json.loads(raw)
+            except ValueError as e:
+                errors.append(f"{rel}:{lineno}: unparseable json fence: "
+                              f"{e}")
+                continue
+            if isinstance(obj, dict) and "schema_version" in obj:
+                n_plans += 1
+                for problem in validate_plan(obj):
+                    errors.append(f"{rel}:{lineno}: embedded DvfsPlan "
+                                  f"invalid: {problem}")
+        # [[...]] inside json fences is data (e.g. kernel_idx pairs), not
+        # an artifact reference — scan with those blocks blanked out
+        ref_text = text
+        for _, raw in _iter_json_blocks(text):
+            ref_text = ref_text.replace(raw, "")
+        for m in ARTIFACT_RE.finditer(ref_text):
             n_refs += 1
             path = m.group(1)
             if not os.path.exists(os.path.join(ROOT, path)) \
@@ -139,7 +192,7 @@ def main() -> int:
             print("  " + e, file=sys.stderr)
         return 1
     print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
-          f"{n_refs} artifact refs verified")
+          f"{n_refs} artifact refs, {n_plans} embedded plan(s) verified")
     return 0
 
 
