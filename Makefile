@@ -22,10 +22,13 @@ bench:
 # Toy-scale perf gates against the checked-in repo-root anchors:
 #  - serve: >10% tokens/sec regression vs BENCH_serve.json fails;
 #  - train: executed kernel-level energy/time regression vs
-#    BENCH_train.json fails.
+#    BENCH_train.json fails;
+#  - fleet: a lost fleet claim (router/cap/hetero) or a >10%
+#    joules-per-token regression vs BENCH_fleet.json fails.
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.serve_continuous --smoke --check
 	PYTHONPATH=src python -m benchmarks.train_dvfs --smoke --check
+	PYTHONPATH=src python -m benchmarks.serve_fleet --smoke --check
 
 # Verify every command fenced in docs/*.md against the benchmark
 # registry and every [[artifact]] reference against the working tree.

@@ -15,7 +15,7 @@ import time
 from . import (pass_level, kernel_overview, kernel_table, totals,
                relaxed_waste, validation, data_parallel, tensor_parallel,
                heterogeneity, switch_latency, dvfs_by_arch, roofline,
-               search_cost, serve_continuous, train_dvfs)
+               search_cost, serve_continuous, serve_fleet, train_dvfs)
 
 
 def _derived(name, out):
@@ -51,6 +51,8 @@ def _derived(name, out):
             return len(ok)
         if name == "serve_continuous":
             return out["energy"]["totals"]["energy_pct"]
+        if name == "serve_fleet":
+            return out["router"]["j_per_tok_vs_rr_pct"]
         if name == "train_dvfs":
             return out["kernel_level"]["energy_pct"]
     except Exception:
@@ -74,6 +76,7 @@ BENCHES = [
     ("roofline", roofline.main),                # §Roofline
     ("train_dvfs", train_dvfs.main),            # §5-6 executed + §7-8 xfer
     ("serve_continuous", serve_continuous.main),  # serving stack, §10-11
+    ("serve_fleet", serve_fleet.main),          # fleet tier, beyond-paper
 ]
 
 REGISTRY = dict(BENCHES)

@@ -1,0 +1,83 @@
+"""Fleet example: route one trace three ways, then cap the cluster.
+
+The fleet tier composes everything below it: each replica runs its own
+kernel-level DVFS plan (PR 1-4), the router reads those plans to predict
+marginal energy, and the :class:`~repro.fleet.FleetGovernor` solves one
+shared Lagrangian budget across replicas to hold a cluster power cap —
+pushing revised plans through each replica's online re-plan path.
+
+Three stages:
+
+1. Generate a seeded peak-load trace (Poisson arrivals, heavy-tailed
+   generation lengths) and replay it through round-robin, least-queue,
+   and the energy/SLO-aware router: same requests, three energy/tail
+   outcomes.
+2. Re-serve under a cluster power cap 5% below the fleet's natural
+   draw and watch the governor's control ticks track it.
+3. Drain and park a replica mid-trace: autoscale-down as one more DVFS
+   decision (the parked state is the chip's deepest frequency pair).
+
+Run:  PYTHONPATH=src python examples/fleet_serve.py
+"""
+from repro.configs import REGISTRY
+from repro.fleet import (FleetGovernor, ReplicaSpec, build_fleet,
+                         generate_trace, router)
+
+CFG = REGISTRY["llama3.2-1b"]
+SPECS = [ReplicaSpec(chip="tpu-v5e", n_slots=4, tau=0.005)] * 3
+RKW = dict(slo_ttft_s=0.08, slo_weight=60.0, slack=0.3)
+
+
+def serve(router_obj, trace, governor=None, autopark=None):
+    fleet = build_fleet(SPECS, CFG, router=router_obj, n_reps=3,
+                        fleet_governor=governor,
+                        autopark_idle_s=autopark)
+    return fleet.serve(trace), fleet
+
+
+def main():
+    trace = generate_trace("poisson", n_requests=200, rate_rps=80.0,
+                           seed=0, straggler_tokens=64, straggler_every=3)
+    print(f"trace: {len(trace)} requests over {trace.duration_s:.1f}s, "
+          f"{trace.total_new_tokens} tokens to generate")
+
+    # --- 1. one trace, three routers --------------------------------
+    for name in ("round-robin", "least-queue", "energy-slo"):
+        rt = router(name, **RKW) if name == "energy-slo" else name
+        rep, _ = serve(rt, trace)
+        print(f"  {name:12s}: {rep['joules_per_token']:.4f} J/tok, "
+              f"TTFT p99 {rep['ttft_p99_s']*1e3:5.0f} ms, "
+              f"idle {rep['idle_energy_j']:5.0f} J")
+
+    # --- 2. cluster power cap ---------------------------------------
+    rep, _ = serve(router("energy-slo", **RKW), trace)
+    cap = 0.95 * rep["power"]["mean_loaded_w"]
+    capped, fleet = serve(router("energy-slo", **RKW), trace,
+                          governor=FleetGovernor(cap, interval_s=0.25))
+    p = capped["power"]
+    print(f"cap {cap:.0f} W: mean loaded {p['mean_loaded_w']:.1f} W "
+          f"(tracking err {p['loaded_tracking_err_frac']*100:.2f}%), "
+          f"makespan {capped['makespan_s']:.2f}s vs "
+          f"{rep['makespan_s']:.2f}s uncapped, "
+          f"{capped['fleet_governor']['n_replans']} pushed re-plans")
+    ticks = [e for e in fleet.governor.events if not e.get("hold")][:3]
+    for e in ticks:
+        print(f"   t={e['t']:.2f}s predicted {e['predicted_w']:.0f} W, "
+              f"lambda={e['lambda']:.2e}, pushed "
+              f"{[pp['replica'] for pp in e['pushed']]}")
+
+    # --- 3. drain + park = autoscale-down ---------------------------
+    rep, fleet = serve(router("energy-slo", **RKW),
+                       generate_trace("diurnal", n_requests=120,
+                                      rate_rps=25.0, seed=0),
+                       autopark=0.25)
+    for b in rep["replicas"]:
+        print(f"  {b['name']:12s}: busy {b['busy_s']:.2f}s idle "
+              f"{b['idle_s']:.2f}s parked {b['parked_s']:.2f}s "
+              f"({b['parked_energy_j']:.0f} J at "
+              f"{fleet.replicas[0].parked_power_w:.0f} W deepest-state)"
+              f" -> {b['state']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -126,6 +126,27 @@ class Chip:
                 + self.p_mem_max * u_m * self.domain_power_factor(fm)
                 + self.p_ici_max * u_i)
 
+    def deepest_pair(self) -> ClockPair:
+        """The lowest grid point in both domains — the park state a
+        drained serving replica sits in (autoscale-down as a DVFS
+        decision: parking is just the deepest frequency assignment)."""
+        return ClockPair(self.grid.mem_clocks_mhz[0],
+                         self.grid.core_clocks_mhz[0])
+
+    def idle_power(self, pair: Optional[ClockPair] = None) -> float:
+        """Power (W) of the chip holding ``pair`` with no work resident:
+        the zero-utilization limit of the activity model (SM issue floor
+        does not apply — nothing issues; DRAM background draw does)."""
+        if pair is None:
+            pair = ClockPair(AUTO, AUTO)
+        fc = self.rel_clock(pair.core, "core")
+        fm = self.rel_clock(pair.mem, "mem")
+        return (self.p_static
+                + self.p_core_max * self.idle_activity
+                * self.domain_power_factor(fc)
+                + self.p_mem_max * self.mem_background
+                * self.domain_power_factor(fm))
+
     def evaluate(self, k: KernelSpec, pair: ClockPair) -> Tuple[float, float]:
         """True (noise-free) per-invocation (time_s, energy_J) for a kernel
         at a clock pair, including the power-cap governor."""

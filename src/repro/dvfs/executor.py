@@ -216,14 +216,14 @@ class ServeGovernorExecutor(GovernorExecutor):
         return cls(gov, chip, controller, **kw)
 
     # -- phase hooks ------------------------------------------------------
-    def on_prefill(self) -> None:
+    def on_prefill(self) -> StepEnergy:
         # by scope, not by name — prefill segments may be named freely
-        self.execute(self.governor.plan.prefill_segment().name)
+        return self.execute(self.governor.plan.prefill_segment().name)
 
-    def on_decode(self, n_active: int) -> None:
+    def on_decode(self, n_active: int) -> StepEnergy:
         # by scope+bucket, not by a "decode@<b>" name convention
         seg = self.governor.plan.decode_segment(max(n_active, 1))
-        self.execute(seg.name)
+        return self.execute(seg.name)
 
 
 class TrainGovernorExecutor(GovernorExecutor):

@@ -1,0 +1,33 @@
+"""repro.fleet — energy-aware multi-replica serving.
+
+The tier above :mod:`repro.serve` and :mod:`repro.dvfs`: replay an
+open-loop request trace (:mod:`~repro.fleet.traces`) across N
+:class:`Replica` instances — each wrapping the serving scheduler, its
+own chip model, and a :class:`~repro.dvfs.DvfsSession`-planned DVFS
+plan — behind a pluggable :func:`router`, with optional cluster-wide
+power capping by the :class:`FleetGovernor` (one shared Lagrangian
+budget across replicas, pushed through each replica's online re-plan
+path) and fleet metering (joules/token, p50/p99 TTFT/TPOT).
+"""
+from .traces import (ARRIVALS, Trace, TraceRequest, generate_trace,
+                     register_arrivals)
+from .replica import ACTIVE, DRAINING, PARKED, Replica, RequestState
+from .router import (ROUTERS, BaseRouter, EnergySloRouter,
+                     LeastQueueRouter, RoundRobinRouter, register_router,
+                     router)
+from .governor import TAU_SWEEP, FleetGovernor, FrontierPoint
+from .metering import fleet_report, latency_stats, power_stats
+from .cluster import (Fleet, ReplicaSpec, build_fleet, build_replica,
+                      decode_tables, default_serve_shapes,
+                      parse_replica_specs)
+
+__all__ = [
+    "ARRIVALS", "Trace", "TraceRequest", "generate_trace",
+    "register_arrivals", "ACTIVE", "DRAINING", "PARKED", "Replica",
+    "RequestState", "ROUTERS", "BaseRouter", "RoundRobinRouter",
+    "LeastQueueRouter", "EnergySloRouter", "register_router", "router",
+    "TAU_SWEEP", "FleetGovernor", "FrontierPoint", "fleet_report",
+    "latency_stats", "power_stats", "Fleet", "ReplicaSpec", "build_fleet",
+    "build_replica", "decode_tables", "default_serve_shapes",
+    "parse_replica_specs",
+]

@@ -1,0 +1,295 @@
+"""The fleet: N replicas, one router, an optional power-cap governor.
+
+:class:`Fleet` drives an open-loop :class:`~repro.fleet.traces.Trace`
+through the replica pool in modeled time: every arrival advances all
+replica clocks to the arrival instant, the router places the request,
+and (when a :class:`~repro.fleet.governor.FleetGovernor` is attached)
+control ticks interleave at a fixed cadence — measuring the last
+window's cluster power and re-solving the shared cap budget.  After the
+last arrival the loop keeps ticking until every queue drains, then pads
+every replica to the common horizon so idle/parked energy covers the
+same span on all of them.
+
+:func:`build_fleet` is the constructor the CLI/benchmark use: a list of
+:class:`ReplicaSpec` (chip, slots, tau, governor), one *template* plan
+per distinct spec (campaign + plan once, then each replica adopts its
+own copy and shares the cached decode tables — replicas re-plan
+independently but never re-measure), and optional cross-chip plan
+transfer: with ``transfer_from``, secondary chip models get their plan
+by :func:`~repro.parallel.plan_transfer.transfer_serve_plan` from the
+primary's — the §7–8 "frequencies translate" claim promoted to
+heterogeneous fleets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.measure import Campaign, MeasurementTable
+from ..core.workload import WorkloadBuilder, decode_slot_buckets
+from ..dvfs.governors import governor as make_governor
+from ..dvfs.plan_ir import DvfsPlan
+from ..dvfs.session import DvfsSession
+from .governor import FleetGovernor
+from .metering import LOADED_UTIL_MIN, fleet_report
+from .replica import ACTIVE, Replica, RequestState
+from .router import BaseRouter, router as make_router
+from .traces import Trace
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """Recipe for one replica (hashable: equal specs share a template)."""
+
+    chip: str = "tpu-v5e"
+    n_slots: int = 4
+    tau: float = 0.005
+    governor: str = "online"
+
+
+def decode_tables(cfg: ModelConfig, chip, decode_shape: ShapeConfig,
+                  n_slots: int, *, tp: int = 1, dp: int = 1, seed: int = 0,
+                  n_reps: int = 5) -> Dict[int, MeasurementTable]:
+    """One measurement table per decode slot bucket on ``chip`` — the
+    shared cache every replica's online re-planning (and the fleet
+    governor's frontier sweep) plans from."""
+    camp = Campaign(chip, seed=seed, n_reps=n_reps)
+    out = {}
+    for b in decode_slot_buckets(n_slots):
+        kernels = WorkloadBuilder(cfg, decode_shape, tp=tp, dp=dp,
+                                  batch_override=b).build()
+        out[b] = camp.run(kernels)
+    return out
+
+
+class Fleet:
+    """A replica pool behind one router, in one modeled timeline."""
+
+    def __init__(self, replicas: Sequence[Replica],
+                 router: Union[str, BaseRouter] = "round-robin",
+                 governor: Optional[FleetGovernor] = None,
+                 autopark_idle_s: Optional[float] = None,
+                 tick_interval_s: Optional[float] = None):
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique, got {names}")
+        self.replicas = list(replicas)
+        self.router = make_router(router) if isinstance(router, str) \
+            else router
+        self.governor = governor
+        self.autopark_idle_s = autopark_idle_s
+        #: power-window cadence when no governor drives it (keep equal
+        #: across runs being compared — window length shapes the
+        #: loaded-power statistics)
+        self.tick_interval_s = tick_interval_s
+        self.power_series: List[Dict] = []
+        self._snap_energy: Dict[str, float] = {}
+        self._snap_busy: Dict[str, float] = {}
+        self._snap_t = 0.0
+
+    # -- clock helpers ----------------------------------------------------
+    def _advance_all(self, t: float) -> None:
+        for r in self.replicas:
+            r.run_until(t)
+        if self.autopark_idle_s is not None:
+            for r in self.replicas:
+                if r.state == ACTIVE and not r.has_work() \
+                        and t - r.last_work_s >= self.autopark_idle_s:
+                    r.drain()
+                    r.park()
+
+    def _window(self, now: float) -> Dict:
+        """Measure the cluster over the window since the last tick."""
+        dt = now - self._snap_t
+        d_energy, util = 0.0, {}
+        for r in self.replicas:
+            e = r.energy_book()["energy_j"]
+            d_energy += e - self._snap_energy.get(r.name, 0.0)
+            db = r.busy_s - self._snap_busy.get(r.name, 0.0)
+            util[r.name] = min(db / dt, 1.0) if dt > 0 else 0.0
+            self._snap_energy[r.name] = e
+            self._snap_busy[r.name] = r.busy_s
+        self._snap_t = now
+        return {"t": now, "dt": dt,
+                "power_w": d_energy / dt if dt > 0 else 0.0,
+                "util": util,
+                "loaded": bool(util)
+                and min(util.values()) > LOADED_UTIL_MIN}
+
+    def _tick(self, now: float) -> None:
+        win = self._window(now)
+        self.power_series.append(win)
+        if self.governor is not None:
+            self.governor.control(self.replicas, now_s=now,
+                                  measured_w=win["power_w"],
+                                  util=win["util"])
+
+    # -- serving ----------------------------------------------------------
+    def serve(self, trace: Trace) -> Dict:
+        """Replay the trace; returns the fleet accounting report."""
+        interval = self.governor.interval_s if self.governor is not None \
+            else (self.tick_interval_s
+                  or max(trace.duration_s / 16.0, 1e-3))
+        states = [RequestState(req=q) for q in trace.requests]
+        if self.governor is not None:
+            # pre-control: cap the initial plans before the first window
+            # (otherwise the ramp-in window runs uncapped and overshoots)
+            self.governor.control(self.replicas, now_s=0.0)
+        next_tick = interval
+        i = 0
+        while i < len(states) or any(r.has_work() for r in self.replicas):
+            t_arr = states[i].req.arrival_s if i < len(states) \
+                else float("inf")
+            if next_tick <= t_arr:
+                self._advance_all(next_tick)
+                self._tick(next_tick)
+                next_tick += interval
+                continue
+            # next_tick > t_arr here, and t_arr is inf once the trace is
+            # exhausted — so this branch only handles real arrivals (the
+            # post-trace drain always goes through the tick branch above)
+            self._advance_all(t_arr)
+            rs = states[i]
+            rep = self.router.route(rs.req, self.replicas)
+            rep.enqueue(rs)
+            i += 1
+        horizon = max(max((rs.finish_s or 0.0) for rs in states),
+                      max(r.clock for r in self.replicas))
+        self._advance_all(horizon)        # idle-pad to a common horizon
+        self._tick(horizon)
+        report = fleet_report(
+            self.replicas, states, horizon,
+            power_series=self.power_series,
+            cap_w=self.governor.power_cap_w if self.governor is not None
+            else None)
+        report["router"] = self.router.name
+        if self.governor is not None:
+            report["fleet_governor"] = self.governor.summary()
+        return report
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def default_serve_shapes(n_slots: int):
+    pre = ShapeConfig(name="serve_prefill", seq_len=512, global_batch=1,
+                      kind="prefill")
+    dec = ShapeConfig(name="serve_decode", seq_len=512,
+                      global_batch=n_slots, kind="decode")
+    return pre, dec
+
+
+def _clone_plan(plan: DvfsPlan) -> DvfsPlan:
+    """Each replica owns a mutable copy (online re-plans are per-replica);
+    the JSON round-trip is the IR's lossless clone."""
+    return DvfsPlan.from_json(plan.to_json())
+
+
+def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
+                  tables: Dict[int, MeasurementTable], *,
+                  wake_latency_s: float = 0.0,
+                  prefill_table: Optional[MeasurementTable] = None
+                  ) -> Replica:
+    """One replica from a template plan + shared decode tables."""
+    gov_kwargs = {"tables": tables} if spec.governor == "online" else {}
+    gov = make_governor(spec.governor, **gov_kwargs)
+    sess = DvfsSession(chip=spec.chip, tau=spec.tau, governor=gov)
+    sess.adopt(_clone_plan(plan))
+    return Replica(name, sess, n_slots=spec.n_slots,
+                   wake_latency_s=wake_latency_s,
+                   prefill_table=prefill_table)
+
+
+def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
+                router: Union[str, BaseRouter] = "energy-slo",
+                power_cap_w: Optional[float] = None,
+                cap_interval_s: float = 1.0,
+                autopark_idle_s: Optional[float] = None,
+                wake_latency_s: float = 0.05,
+                transfer_from: Optional[str] = None,
+                seed: int = 0, n_reps: int = 5,
+                fleet_governor: Optional[FleetGovernor] = None,
+                tick_interval_s: Optional[float] = None) -> Fleet:
+    """Plan once per distinct spec, instantiate one replica per entry.
+
+    With ``transfer_from`` (a chip name appearing in ``specs``), every
+    *other* chip model's template plan is derived from that chip's plan
+    via cross-chip transfer instead of its own planning run (the target
+    is still measured, for repair and metering) — the
+    heterogeneous-fleet deployment story: one plan search, every chip
+    model of the fleet.
+    """
+    from ..parallel.plan_transfer import transfer_serve_plan
+
+    plans: Dict[ReplicaSpec, DvfsPlan] = {}
+    tables: Dict[ReplicaSpec, Dict[int, MeasurementTable]] = {}
+    pre_tables: Dict[ReplicaSpec, MeasurementTable] = {}
+    src_plan: Optional[DvfsPlan] = None
+    ordered = list(specs)
+    if transfer_from is not None:
+        if not any(s.chip == transfer_from for s in ordered):
+            raise ValueError(f"transfer_from={transfer_from!r} does not "
+                             f"appear in the replica specs")
+        ordered.sort(key=lambda s: s.chip != transfer_from)
+    for spec in ordered:
+        if spec in plans:
+            continue
+        pre, dec = default_serve_shapes(spec.n_slots)
+        sess = DvfsSession(chip=spec.chip, tau=spec.tau,
+                           governor="online", seed=seed, n_reps=n_reps)
+        tabs = decode_tables(cfg, sess.chip, dec, spec.n_slots,
+                             seed=seed, n_reps=n_reps)
+        pre_tables[spec] = Campaign(sess.chip, seed=seed, n_reps=n_reps) \
+            .run(WorkloadBuilder(cfg, pre).build())
+        if transfer_from is not None and spec.chip != transfer_from \
+                and src_plan is not None:
+            plan = transfer_serve_plan(src_plan, cfg, sess.chip,
+                                       prefill_shape=pre,
+                                       decode_shape=dec,
+                                       tables=tabs, seed=seed,
+                                       n_reps=n_reps)
+        else:
+            plan = sess.plan_serve(cfg, n_slots=spec.n_slots,
+                                   prefill_shape=pre, decode_shape=dec)
+            if transfer_from is not None and spec.chip == transfer_from:
+                src_plan = plan
+        plans[spec] = plan
+        tables[spec] = tabs
+    replicas = [build_replica(f"r{i}-{spec.chip}", spec, plans[spec],
+                              tables[spec],
+                              wake_latency_s=wake_latency_s,
+                              prefill_table=pre_tables[spec])
+                for i, spec in enumerate(specs)]
+    gov = fleet_governor
+    if gov is None and power_cap_w is not None:
+        gov = FleetGovernor(power_cap_w, interval_s=cap_interval_s)
+    return Fleet(replicas, router=router, governor=gov,
+                 autopark_idle_s=autopark_idle_s,
+                 tick_interval_s=tick_interval_s)
+
+
+def parse_replica_specs(text: str) -> List[ReplicaSpec]:
+    """CLI grammar: ``chip[:slots[:tau]][,chip...]`` or ``Nxchip[...]``,
+    e.g. ``2xtpu-v5e:4,a4000:4`` -> two tpu-v5e replicas + one a4000."""
+    specs: List[ReplicaSpec] = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        count = 1
+        if "x" in part and part.split("x", 1)[0].isdigit():
+            head, part = part.split("x", 1)
+            count = int(head)
+        bits = part.split(":")
+        spec = ReplicaSpec(
+            chip=bits[0],
+            n_slots=int(bits[1]) if len(bits) > 1 else 4,
+            tau=float(bits[2]) if len(bits) > 2 else 0.005)
+        specs.extend([spec] * count)
+    if not specs:
+        raise ValueError(f"no replica specs parsed from {text!r}")
+    return specs

@@ -1,0 +1,106 @@
+"""Fleet-level energy/latency accounting.
+
+Aggregates per-replica books — each replica's
+:class:`~repro.dvfs.GovernorExecutor` energy meters (busy) plus its
+integrated idle/parked dwell — into the quantities cluster papers argue
+about: **joules per generated token** (the energy headline; includes
+idle burn, so packing policies get credit for letting replicas idle or
+park) and the **TTFT/TPOT tail** (p50/p99 over completed requests —
+the SLO side of every energy claim).  A per-window cluster power series
+(recorded by the fleet loop at governor-tick cadence) feeds the
+power-cap verification: ``max_window_w`` against the cap, mean over
+loaded windows for tracking tightness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .replica import Replica, RequestState
+
+#: a window is "loaded" when every replica spent at least this fraction
+#: of it serving.  Deliberately not ~1.0: admission stalls dent util on
+#: windows that are still loaded operation, and excluding them would
+#: cherry-pick the prefill-hot windows into the loaded-power statistic.
+#: Shared by Fleet._window (labeling) and FleetGovernor.control (bias
+#: feedback) so the two layers can never disagree on what "loaded" is.
+LOADED_UTIL_MIN = 0.8
+
+
+def _pcts(vals: Sequence[float], ps=(50, 99)) -> Dict[str, float]:
+    if not vals:
+        return {f"p{p}": float("nan") for p in ps}
+    arr = np.asarray(vals, dtype=float)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+
+def latency_stats(requests: Sequence[RequestState]) -> Dict:
+    """p50/p99 TTFT and TPOT over the completed request set."""
+    done = [rs for rs in requests if rs.done]
+    ttft = [rs.ttft_s for rs in done if rs.ttft_s is not None]
+    tpot = [rs.tpot_s for rs in done if rs.tpot_s is not None]
+    out = {"n_completed": len(done)}
+    out.update({f"ttft_{k}_s": v for k, v in _pcts(ttft).items()})
+    out.update({f"tpot_{k}_s": v for k, v in _pcts(tpot).items()})
+    return out
+
+
+def power_stats(series: Sequence[Dict],
+                cap_w: Optional[float] = None) -> Dict:
+    """Window power series -> tracking stats (vs the cap when given).
+
+    ``loaded`` windows (any replica busy the whole window) are the ones
+    a cap must hold on; ramp-in/drain windows dilute the mean."""
+    if not series:
+        return {"n_windows": 0}
+    watts = np.asarray([w["power_w"] for w in series], dtype=float)
+    loaded = np.asarray([w["power_w"] for w in series
+                         if w.get("loaded", True)], dtype=float)
+    out = {"n_windows": len(series),
+           "max_window_w": float(watts.max()),
+           "mean_window_w": float(watts.mean()),
+           "mean_loaded_w": float(loaded.mean()) if loaded.size
+           else float(watts.mean())}
+    if cap_w:
+        out["cap_w"] = float(cap_w)
+        out["max_over_cap_frac"] = float(watts.max() / cap_w - 1.0)
+        if loaded.size:
+            out["loaded_tracking_err_frac"] = \
+                float(abs(loaded.mean() / cap_w - 1.0))
+    return out
+
+
+def fleet_report(replicas: Sequence[Replica],
+                 requests: Sequence[RequestState],
+                 horizon_s: float,
+                 power_series: Optional[List[Dict]] = None,
+                 cap_w: Optional[float] = None) -> Dict:
+    """The fleet run's single accounting artifact."""
+    books = [r.energy_book() for r in replicas]
+    energy = sum(b["energy_j"] for b in books)
+    busy_energy = sum(b["busy_energy_j"] for b in books)
+    base_busy = sum(b["base_busy_energy_j"] for b in books)
+    tokens = sum(b["tokens"] for b in books)
+    finishes = [rs.finish_s for rs in requests if rs.finish_s is not None]
+    out = {
+        "n_replicas": len(replicas),
+        "horizon_s": horizon_s,
+        "makespan_s": max(finishes) if finishes else horizon_s,
+        "energy_j": energy,
+        "busy_energy_j": busy_energy,
+        "idle_energy_j": sum(b["idle_energy_j"] for b in books),
+        "parked_energy_j": sum(b["parked_energy_j"] for b in books),
+        "base_busy_energy_j": base_busy,
+        "tokens": tokens,
+        "joules_per_token": energy / tokens if tokens else float("nan"),
+        "avg_power_w": energy / horizon_s if horizon_s > 0
+        else float("nan"),
+        "dvfs_busy_energy_pct": (100.0 * (busy_energy / base_busy - 1.0)
+                                 if base_busy > 0 else 0.0),
+        "replicas": books,
+    }
+    out.update(latency_stats(requests))
+    if power_series is not None:
+        out["power"] = power_stats(power_series, cap_w)
+    return out

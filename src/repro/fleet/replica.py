@@ -1,0 +1,318 @@
+"""One serving replica of the fleet: engine semantics in modeled time.
+
+A :class:`Replica` wraps the serving stack one tier down —
+:class:`~repro.serve.scheduler.Scheduler` for admission/slot lifecycle,
+a :class:`~repro.dvfs.DvfsSession`-planned :class:`~repro.dvfs.DvfsPlan`
+with its own chip model and governor, and the session's
+:class:`~repro.dvfs.ServeGovernorExecutor` for phase replay + energy
+metering — and advances it in **modeled time**: every prefill/decode
+step's duration and energy come from the executed plan segments (the
+same :class:`~repro.runtime.energy.EnergyMeter` integration the engine's
+executor performs), so a 200-request trace across N replicas simulates
+in milliseconds while exercising the *real* scheduler, governor,
+executor, and online re-planning code paths.  A real
+:class:`~repro.serve.ServeEngine` plugs into the identical executor
+protocol (``on_prefill`` / ``on_decode``) when token-level fidelity is
+needed — see ``attach_engine``.
+
+Lifecycle: ``active`` → ``draining`` (no new routes; queued + in-flight
+requests finish) → ``parked``.  A parked replica is modeled as the chip
+holding its **deepest frequency state** (both grid minima —
+``Chip.deepest_pair``), so autoscale-down is literally one more DVFS
+decision: park power is ``Chip.idle_power(deepest)`` vs the idle
+(auto-clock) draw, and waking is a frequency ramp charged as
+``wake_latency_s``.  Idle/parked dwell is integrated alongside the
+executor's busy books, so fleet energy totals cover the whole horizon,
+not just the busy fraction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..dvfs.session import DvfsSession
+from ..serve.scheduler import Scheduler
+from .traces import TraceRequest
+
+ACTIVE = "active"
+DRAINING = "draining"
+PARKED = "parked"
+
+
+@dataclass
+class RequestState:
+    """Mutable runtime record of one trace request inside the fleet."""
+
+    req: TraceRequest
+    routed_to: Optional[str] = None
+    admitted_s: Optional[float] = None     # entered a batch slot
+    first_token_s: Optional[float] = None  # prefill done, token 0 sampled
+    finish_s: Optional[float] = None
+    n_generated: int = 0
+    remaining: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.finish_s is not None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Arrival -> first token (queue wait + admission + prefill)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.req.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first."""
+        if self.finish_s is None or self.n_generated < 2:
+            return None
+        return (self.finish_s - self.first_token_s) \
+            / (self.n_generated - 1)
+
+
+class Replica:
+    """A serving replica driven in modeled time by the fleet loop.
+
+    The session must already hold an adopted serve plan (via
+    ``plan_serve`` or ``adopt``); the replica builds its governor
+    executor from it.  ``run_until`` is the only clock mutator: the
+    fleet advances every replica to each arrival/control event, one
+    admission-or-decode step at a time.
+    """
+
+    def __init__(self, name: str, session: DvfsSession, *,
+                 n_slots: Optional[int] = None,
+                 wake_latency_s: float = 0.0,
+                 prefill_table=None):
+        plan = session.governor.plan
+        if plan is None or plan.kind != "serve":
+            raise ValueError(f"replica {name!r} needs a session holding "
+                             f"an adopted serve plan")
+        if n_slots is None:
+            n_slots = int(plan.meta.get("n_slots", 0)) \
+                or max(plan.decode_buckets)
+        self.name = name
+        self.session = session
+        self.chip = session.chip
+        self.executor = session.serve_executor()
+        self.scheduler = Scheduler(n_slots)
+        self.n_slots = n_slots
+        self.wake_latency_s = wake_latency_s
+        self.state = ACTIVE
+        self.clock = 0.0
+        self.busy_s = 0.0
+        self.idle_s = 0.0
+        self.parked_s = 0.0
+        self.n_wakes = 0
+        self.last_work_s = 0.0         # clock when work was last present
+        self.completed: List[RequestState] = []
+        self.engine = None             # optional real ServeEngine twin
+        #: prefill measurement table (fleet governor's second cap lever)
+        self.prefill_table = prefill_table
+        self.events: List[Dict] = []
+
+    # -- plan access ------------------------------------------------------
+    @property
+    def plan(self):
+        return self.session.governor.plan
+
+    @property
+    def governor(self):
+        return self.session.governor
+
+    def decode_step_time(self, n_active: int) -> float:
+        return self.plan.decode_segment(max(n_active, 1)).time_s
+
+    def decode_energy_per_token(self, n_active: int) -> float:
+        """Planned decode energy per generated token at an occupancy:
+        the marginal-energy signal the energy-aware router scores."""
+        seg = self.plan.decode_segment(max(n_active, 1))
+        return seg.energy_j / max(seg.bucket, 1)
+
+    @property
+    def prefill_time_s(self) -> float:
+        return self.plan.prefill_segment().time_s
+
+    @property
+    def prefill_energy_j(self) -> float:
+        return self.plan.prefill_segment().energy_j
+
+    # -- load signals (router inputs) -------------------------------------
+    @property
+    def n_active(self) -> int:
+        return self.scheduler.n_active
+
+    @property
+    def n_queued(self) -> int:
+        return self.scheduler.pending
+
+    @property
+    def routable(self) -> bool:
+        return self.state == ACTIVE
+
+    def backlog_tokens(self) -> int:
+        """Generation tokens still owed: in-flight remainders + queued
+        budgets (the service-demand estimate behind wait prediction)."""
+        live = sum(rs.remaining for rs in self.scheduler.slots
+                   if rs is not None)
+        queued = sum(rs.req.max_new_tokens for rs in self.scheduler.queue)
+        return live + queued
+
+    def est_wait_s(self) -> float:
+        """Predicted delay before the *next* routed request starts its
+        own prefill.  Two components the router must see:
+
+        * prefill serialization — every queued request ahead prefills
+          back-to-back before this one (the engine admits the whole
+          queue head-first at the next round boundary);
+        * slot availability — beyond the free slots, each queued
+          request ahead consumes one slot-release; release times are
+          predicted from the in-flight generation remainders.
+        """
+        q = self.scheduler.pending
+        free = self.n_slots - self.scheduler.n_active
+        wait = q * self.prefill_time_s
+        if q >= free:
+            rem = sorted(rs.remaining for rs in self.scheduler.slots
+                         if rs is not None)
+            k = min(q - free, len(rem) - 1) if rem else 0
+            if rem:
+                per_step = self.decode_step_time(self.scheduler.n_active)
+                wait += rem[k] * per_step
+        return wait
+
+    # -- lifecycle --------------------------------------------------------
+    def drain(self) -> None:
+        """Stop accepting routes; queued + in-flight work still finishes,
+        then the replica parks itself."""
+        if self.state == ACTIVE:
+            self.state = DRAINING
+            self.events.append({"t": self.clock, "event": "drain"})
+
+    def park(self) -> None:
+        """Enter the deepest frequency state.  Only an empty replica can
+        park; drain first to flush in-flight work."""
+        if self.has_work():
+            raise RuntimeError(f"replica {self.name!r} has in-flight or "
+                               f"queued work; drain before parking")
+        if self.state != PARKED:
+            self.state = PARKED
+            self.events.append({"t": self.clock, "event": "park"})
+
+    def unpark(self) -> None:
+        """Ramp back to serving clocks; the wake latency is charged as
+        parked dwell (the request that woke us waits through it)."""
+        if self.state == PARKED:
+            self.parked_s += self.wake_latency_s
+            self.clock += self.wake_latency_s
+            self.n_wakes += 1
+            self.state = ACTIVE
+            self.events.append({"t": self.clock, "event": "unpark"})
+
+    # -- work -------------------------------------------------------------
+    def enqueue(self, rs: RequestState) -> None:
+        """Accept a routed request into the admission queue."""
+        if self.state == PARKED:
+            self.unpark()                # routed-to-parked wakes the chip
+        elif self.state == DRAINING:
+            raise RuntimeError(f"replica {self.name!r} is draining; "
+                               f"router must not send it new work")
+        rs.routed_to = self.name
+        self.last_work_s = self.clock
+        self.scheduler.submit([rs])
+
+    def has_work(self) -> bool:
+        return bool(self.scheduler.pending or self.scheduler.n_active)
+
+    def attach_engine(self, engine) -> None:
+        """Optional token-level twin: a real ServeEngine built with this
+        replica's ``executor`` (same phase hooks, same metering)."""
+        self.engine = engine
+
+    def _finish(self, slot: int, rs: RequestState) -> None:
+        rs.finish_s = self.clock
+        self.scheduler.release(slot)
+        self.completed.append(rs)
+
+    def _step(self) -> None:
+        """One engine round in modeled time: admit + prefill every
+        admissible queued request, then one decode step over the pool."""
+        admitted: List[Tuple[int, RequestState]] = []
+        while True:
+            nxt = self.scheduler.admit_next()
+            if nxt is None:
+                break
+            admitted.append(nxt)
+        for slot, rs in admitted:
+            rs.admitted_s = self.clock
+            rec = self.executor.on_prefill()
+            self.busy_s += rec.time_s
+            self.clock += rec.time_s
+            rs.first_token_s = self.clock
+            rs.n_generated = 1
+            rs.remaining = rs.req.max_new_tokens - 1
+            if rs.remaining <= 0:
+                self._finish(slot, rs)
+        n = self.scheduler.n_active
+        if n:
+            rec = self.executor.on_decode(n)
+            self.busy_s += rec.time_s
+            self.clock += rec.time_s
+            for slot, rs in enumerate(list(self.scheduler.slots)):
+                if rs is None or rs.first_token_s is None:
+                    continue
+                rs.n_generated += 1
+                rs.remaining -= 1
+                if rs.remaining <= 0:
+                    self._finish(slot, rs)
+        self.last_work_s = self.clock
+        if self.state == DRAINING and not self.has_work():
+            self.park()
+
+    def run_until(self, t: float) -> None:
+        """Advance the modeled clock to (at least) ``t``: execute rounds
+        while work exists — the step in flight at ``t`` completes, as on
+        real hardware — then dwell idle/parked up to ``t``."""
+        while self.clock < t and self.state != PARKED and self.has_work():
+            self._step()
+        if self.clock < t:
+            dt = t - self.clock
+            if self.state == PARKED:
+                self.parked_s += dt
+            elif self.state == DRAINING and not self.has_work():
+                self.park()
+                self.parked_s += dt
+            else:
+                self.idle_s += dt
+            self.clock = t
+
+    # -- accounting -------------------------------------------------------
+    @property
+    def idle_power_w(self) -> float:
+        return self.chip.idle_power()
+
+    @property
+    def parked_power_w(self) -> float:
+        return self.chip.idle_power(self.chip.deepest_pair())
+
+    def energy_book(self) -> Dict:
+        """Whole-horizon accounting: executed (busy) books from the
+        governor executor plus integrated idle/parked dwell."""
+        ex = self.executor.summary()
+        busy = ex["totals"]
+        idle_j = self.idle_s * self.idle_power_w
+        parked_j = self.parked_s * self.parked_power_w
+        tokens = sum(rs.n_generated for rs in self.completed)
+        return {"name": self.name, "chip": self.chip.name,
+                "state": self.state, "clock_s": self.clock,
+                "busy_s": self.busy_s, "idle_s": self.idle_s,
+                "parked_s": self.parked_s, "n_wakes": self.n_wakes,
+                "busy_energy_j": busy["energy_j"],
+                "base_busy_energy_j": busy["base_energy_j"],
+                "idle_energy_j": idle_j, "parked_energy_j": parked_j,
+                "energy_j": busy["energy_j"] + idle_j + parked_j,
+                "tokens": tokens,
+                "n_completed": len(self.completed),
+                "governor_revision": self.governor.revision,
+                "executed": ex}

@@ -1,0 +1,101 @@
+"""Fleet launcher: ``python -m repro.launch.fleet --replicas ... ``
+
+Builds an energy-aware serving fleet (one DVFS-planned replica per
+spec), replays a seeded open-loop trace through the chosen router (and
+optional cluster power cap), and prints the fleet report: joules per
+token, TTFT/TPOT tails, per-replica books, and the governor's cap
+events.
+
+Examples::
+
+    python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
+        --router energy-slo --process poisson --rate 80 --requests 200
+    python -m repro.launch.fleet --replicas 2xrtx3080ti:4,a4000:4 \
+        --transfer-from rtx3080ti --process diurnal --rate 25
+    python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
+        --power-cap 340 --rate 120
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from ..configs import get_config
+from ..fleet import (FleetGovernor, build_fleet, generate_trace,
+                     parse_replica_specs, router)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--replicas", default="3xtpu-v5e:4",
+                    help="chip[:slots[:tau]] list, Nx prefix repeats "
+                         "(e.g. 2xtpu-v5e:4,a4000:4)")
+    ap.add_argument("--router", default="energy-slo",
+                    help="repro.fleet router registry name")
+    ap.add_argument("--slo-ttft", type=float, default=0.1,
+                    help="energy-slo router TTFT target (s)")
+    ap.add_argument("--process", default="poisson",
+                    choices=["poisson", "diurnal", "bursty"])
+    ap.add_argument("--rate", type=float, default=60.0,
+                    help="mean arrival rate (req/s)")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--power-cap", type=float, default=None,
+                    help="cluster power cap (W); enables FleetGovernor")
+    ap.add_argument("--autopark", type=float, default=None,
+                    help="park replicas idle longer than this (s)")
+    ap.add_argument("--transfer-from", default=None,
+                    help="chip whose plan seeds the other chips' plans "
+                         "via cross-chip transfer")
+    ap.add_argument("--save-trace", default=None,
+                    help="write the generated trace JSON here")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the full report as JSON")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    specs = parse_replica_specs(args.replicas)
+    trace = generate_trace(args.process, n_requests=args.requests,
+                           rate_rps=args.rate, seed=args.seed,
+                           straggler_tokens=64, straggler_every=3)
+    if args.save_trace:
+        trace.save(args.save_trace)
+    rt = router(args.router, slo_ttft_s=args.slo_ttft) \
+        if args.router == "energy-slo" else args.router
+    gov = FleetGovernor(args.power_cap) if args.power_cap else None
+    fleet = build_fleet(specs, cfg, router=rt, fleet_governor=gov,
+                        autopark_idle_s=args.autopark,
+                        transfer_from=args.transfer_from,
+                        seed=args.seed)
+    rep = fleet.serve(trace)
+
+    if args.json:
+        print(json.dumps(rep, indent=1, default=float))
+        return
+    print(f"[fleet] {len(specs)} replicas, router={args.router}, "
+          f"{args.process}@{args.rate:g} rps, {args.requests} requests")
+    print(f"[fleet] {rep['tokens']} tokens in {rep['makespan_s']:.2f}s "
+          f"makespan: {rep['joules_per_token']:.4f} J/tok "
+          f"({rep['energy_j']:.0f} J total, "
+          f"{rep['idle_energy_j']:.0f} J idle, "
+          f"{rep['parked_energy_j']:.0f} J parked)")
+    print(f"[fleet] TTFT p50/p99 {rep['ttft_p50_s']*1e3:.0f}/"
+          f"{rep['ttft_p99_s']*1e3:.0f} ms, TPOT p99 "
+          f"{rep['tpot_p99_s']*1e3:.1f} ms, "
+          f"{rep['n_completed']}/{args.requests} completed")
+    for b in rep["replicas"]:
+        print(f"[fleet]   {b['name']:16s} {b['chip']:15s} "
+              f"{b['tokens']:5d} tok  busy {b['busy_s']:.2f}s "
+              f"idle {b['idle_s']:.2f}s parked {b['parked_s']:.2f}s "
+              f"rev={b['governor_revision']} ({b['state']})")
+    if args.power_cap:
+        p = rep["power"]
+        print(f"[fleet] cap {args.power_cap:.0f} W: mean loaded "
+              f"{p['mean_loaded_w']:.1f} W "
+              f"(err {p['loaded_tracking_err_frac']*100:.2f}%), "
+              f"{rep['fleet_governor']['n_replans']} re-plans")
+
+
+if __name__ == "__main__":
+    main()

@@ -239,3 +239,142 @@ def compare_transfer(src: TrainPlanBundle, cfg: ModelConfig, chip: Chip,
             transfer_energy_j=xe, replan_energy_j=fe, base_energy_j=be,
             n_remapped=n_remapped, n_repaired=n_repaired))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Cross-chip serve-plan transfer (the heterogeneous-fleet path)
+# ---------------------------------------------------------------------------
+
+def _chip_by_model_name(name: str) -> Chip:
+    """Resolve a ``Chip.name`` (as recorded in plan artifacts) back to a
+    chip model — registry keys are short ids, plans store full names."""
+    from ..core.power_model import CHIPS
+    for factory in CHIPS.values():
+        c = factory()
+        if c.name == name:
+            return c
+    raise KeyError(f"no registered chip model named {name!r}")
+
+
+def _snap_clock(value, src_chip: Chip, dst_chip: Chip,
+                domain: str) -> object:
+    """Map one domain's clock by *relative* frequency: AUTO passes
+    through; a MHz value keeps its fraction of fmax and snaps to the
+    nearest point of the target grid (grids differ across chip models —
+    absolute MHz do not transfer, operating points do)."""
+    from ..core.freq import AUTO
+    if value == AUTO:
+        return AUTO
+    rel = src_chip.rel_clock(value, domain)
+    clocks = (dst_chip.grid.mem_clocks_mhz if domain == "mem"
+              else dst_chip.grid.core_clocks_mhz)
+    arr = np.asarray(clocks, dtype=float)
+    target = rel * arr[-1]
+    return float(arr[int(np.argmin(np.abs(arr - target)))])
+
+
+def transfer_serve_plan(src, cfg: ModelConfig, chip: Chip, *,
+                        prefill_shape: ShapeConfig,
+                        decode_shape: ShapeConfig,
+                        tp: int = 1, dp: int = 1, seed: int = 0,
+                        n_reps: int = 5,
+                        repair_margin: float = REPAIR_MARGIN,
+                        tables: Optional[Dict] = None):
+    """Derive a serve :class:`~repro.dvfs.DvfsPlan` for a *different
+    chip model* from a plan discovered on another — §7–8's "frequencies
+    translate" claim promoted from meshes to heterogeneous fleets.
+
+    Per segment (prefill + each decode bucket), a three-stage
+    measurement-free mapping mirroring :func:`transfer_train_bundle`:
+
+    1. **Relative-frequency snap** — each kernel's source clock pair is
+       read as a *fraction of fmax* per domain and snapped onto the
+       target chip's grid (the operating point transfers; the MHz value
+       is grid-specific).
+    2. **Budget repair** — kernels whose snapped clocks regress their
+       per-kernel time beyond ``(1+tau)*repair_margin`` on the target
+       table are re-picked from the transferred frequency vocabulary
+       under the strict local budget (one re-timing, not a campaign).
+    3. **Re-coalesce** — the per-kernel choices are re-compiled into a
+       switch-aware schedule with the *target* chip's switch latency,
+       so the transferred plan carries exact target-side accounting.
+
+    ``tables`` (decode-bucket -> :class:`MeasurementTable` on the target
+    chip) lets the caller share one campaign with the replica's online
+    re-planning cache; missing phases are measured here.
+    """
+    from ..dvfs.plan_ir import DvfsPlan, PlanSegment
+
+    if src.kind != "serve":
+        raise ValueError(f"kind={src.kind!r} plan is not a serve plan")
+    if src.chip_name == chip.name:
+        raise ValueError(f"source and target are both {chip.name!r}; "
+                         f"cross-chip transfer needs distinct chip "
+                         f"models (clone the plan instead)")
+    src_chip = _chip_by_model_name(src.chip_name)
+    tau = float(src.meta.get("tau", 0.0))
+    n_slots = int(src.meta.get("n_slots", 0)) or max(src.decode_buckets)
+    camp = Campaign(chip, seed=seed, n_reps=n_reps)
+    tables = dict(tables or {})
+
+    def target_table(seg):
+        if seg.scope == "serve-decode" and seg.bucket in tables:
+            return tables[seg.bucket]
+        builder = WorkloadBuilder(
+            cfg, prefill_shape if seg.scope == "serve-prefill"
+            else decode_shape, tp=tp, dp=dp,
+            batch_override=None if seg.scope == "serve-prefill"
+            else int(seg.bucket))
+        return camp.run(builder.build())
+
+    segments = []
+    for seg in src.segments:
+        table = target_table(seg)
+        src_pairs = seg.to_phase_plan().kernel_clock_pairs()
+        by_name = {k.name: p for k, p in zip(seg.kernels, src_pairs)}
+        pair_idx = {(p.mem, p.core): i for i, p in enumerate(table.pairs)}
+        mapped: List[int] = []
+        n_repaired = n_unmatched = 0
+        for i, k in enumerate(table.kernels):
+            pair = by_name.get(k.name)
+            if pair is None and i < len(src_pairs):
+                pair = src_pairs[i]          # same builder, same order
+            if pair is None:
+                n_unmatched += 1
+                mapped.append(table.auto_idx)
+                continue
+            snapped = (_snap_clock(pair[0], src_chip, chip, "mem"),
+                       _snap_clock(pair[1], src_chip, chip, "core"))
+            mapped.append(pair_idx.get(snapped, table.auto_idx))
+        vocab = sorted(set(mapped) | {table.auto_idx})
+        kchoice: List[int] = []
+        for i, ci in enumerate(mapped):
+            auto_t = table.time[i, table.auto_idx]
+            if table.time[i, ci] > (1.0 + tau) * repair_margin * auto_t:
+                n_repaired += 1
+                feas = [c for c in vocab
+                        if table.time[i, c] <= (1.0 + tau) * auto_t]
+                ci = min(feas, key=lambda c: table.energy[i, c]) if feas \
+                    else table.auto_idx
+            kchoice.append(ci)
+        seq = expand_sequence(table)
+        choice_seq = np.array([kchoice[ki] for ki in seq], dtype=np.int32)
+        cp = CoalescedPlan(choice_seq=choice_seq, sequence=seq,
+                           table=table,
+                           switch_latency_s=chip.switch_latency_s,
+                           switch_energy_j=chip.switch_latency_s
+                           * SWITCH_POWER_W)
+        sched = schedule_from_coalesced(
+            cp, meta={"phase": seg.name,
+                      "transferred_from_chip": src.chip_name,
+                      "n_kernels": len(table.kernels),
+                      "n_repaired": n_repaired,
+                      "n_unmatched": n_unmatched})
+        segments.append(PlanSegment(
+            name=seg.name, schedule=sched, kernels=table.kernels,
+            granularity="kernel", scope=seg.scope, bucket=seg.bucket))
+    md = dict(src.meta)
+    md.update({"transferred": True, "transfer_src_chip": src.chip_name,
+               "n_slots": n_slots})
+    return DvfsPlan(chip_name=chip.name, kind="serve", segments=segments,
+                    meta=md)

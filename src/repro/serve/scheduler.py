@@ -21,6 +21,11 @@ class Scheduler:
         self.n_slots = n_slots
         self.queue: Deque = deque()
         self.slots: List[Optional[object]] = [None] * n_slots
+        # free-slot deque: admission pops the head in O(1) instead of
+        # scanning the slot list (O(n_slots) per admit).  release appends
+        # at the tail; requeue (an *undone* admission) returns the slot to
+        # the head so backpressure retries the same slot it just tried.
+        self._free: Deque[int] = deque(range(n_slots))
         # lifecycle counters (surfaced in benchmark summaries)
         self.n_admitted = 0
         self.n_completed = 0
@@ -43,18 +48,14 @@ class Scheduler:
         return sum(r is not None for r in self.slots)
 
     def free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.slots):
-            if r is None:
-                return i
-        return None
+        """Peek the next slot an admission would use (O(1))."""
+        return self._free[0] if self._free else None
 
     def admit_next(self) -> Optional[Tuple[int, object]]:
-        """Pop the queue head into the first free slot, if both exist."""
-        if not self.queue:
+        """Pop the queue head into the next free slot, if both exist."""
+        if not self.queue or not self._free:
             return None
-        slot = self.free_slot()
-        if slot is None:
-            return None
+        slot = self._free.popleft()
         req = self.queue.popleft()
         self.slots[slot] = req
         self.n_admitted += 1
@@ -71,6 +72,7 @@ class Scheduler:
         self.slots[slot] = None
         self.n_admitted -= 1
         self.queue.appendleft(req)
+        self._free.appendleft(slot)
         return req
 
     def release(self, slot: int):
@@ -80,6 +82,7 @@ class Scheduler:
             raise ValueError(f"slot {slot} is already free")
         self.slots[slot] = None
         self.n_completed += 1
+        self._free.append(slot)
         return req
 
     def done(self) -> bool:

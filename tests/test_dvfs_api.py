@@ -508,3 +508,55 @@ def test_plan_decode_joint_respects_aggregate_budget(decode_tables):
         t_base = sum(mix[b] * decode_tables[b].baseline_totals()[0]
                      for b in mix)
         assert t <= (1 + policy.tau) * t_base * (1 + 1e-6)
+
+
+def test_rate_limited_controller_honors_interval_across_replan(
+        decode_tables):
+    """Satellite: an online re-plan (revision bump) landing mid-throttle-
+    window must not let the swapped-in schedule emit switches faster than
+    the driver's min_interval, nor at off-grid frequencies."""
+    policy = WastePolicy(0.01)
+    plan = _serve_plan(decode_tables, PLANNED_MIX, policy)
+    gov = OnlineGovernor(plan, policy=policy, chip=CHIP,
+                         tables=decode_tables, window=WINDOW)
+
+    class RecordingController(RateLimitedController):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.applied = []            # (modeled time, applied pair)
+
+        def set_clocks(self, pair):
+            n0 = self.n_switches
+            super().set_clocks(pair)
+            if self.n_switches > n0:
+                self.applied.append((self._t, self.current))
+
+    min_interval = 2e-3
+    ctl = RecordingController(CHIP, min_interval_s=min_interval)
+    ex = ServeGovernorExecutor(gov, CHIP, controller=ctl)
+    for i in range(30):
+        ex.on_decode(DRIFT_PATTERN[i % len(DRIFT_PATTERN)])
+    # force a revision bump mid-stream: the throttle window straddles it
+    rev0 = gov.revision
+    gov.replan(DRIFT_MIX, reasons=["forced:test"])
+    assert gov.revision == rev0 + 1
+    for i in range(30):
+        ex.on_decode(DRIFT_PATTERN[i % len(DRIFT_PATTERN)])
+    summary = ex.summary()
+    ex.finish()
+
+    # every *applied* switch respects the driver interval, re-plan or not
+    times = [t for t, _ in ctl.applied]
+    assert len(times) >= 2
+    assert all(b - a >= min_interval - 1e-12
+               for a, b in zip(times, times[1:]))
+    # the driver refused some requests (the schedule asked faster)
+    assert ctl.n_throttled > 0
+    # nothing the new schedule requested bypassed step quantization
+    grid = CHIP.grid
+    for _, pair in ctl.applied:
+        assert pair.mem == AUTO or pair.mem in grid.mem_clocks_mhz
+        assert pair.core == AUTO or pair.core in grid.core_clocks_mhz
+    # accounting survived the mid-window swap: all 60 steps in the books
+    assert summary["totals"]["steps"] == 60
+    assert summary["governor_revision"] == gov.revision

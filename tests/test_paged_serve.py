@@ -85,6 +85,63 @@ def test_page_pool_allocate_free_invariants():
     assert sorted(pool._free) == list(range(1, 9))
 
 
+def test_page_pool_randomized_stress():
+    """Satellite invariant sweep: long interleaved admit/retire/requeue
+    sequences must never double-allocate a page, leak one, or hand out
+    the reserved parking page 0 — whatever order slots fill and free."""
+    rng = np.random.default_rng(0)
+    n_pages, page_size, n_slots, max_blocks = 33, 4, 6, 8
+    pool = PagePool(n_pages=n_pages, page_size=page_size,
+                    n_slots=n_slots, max_blocks=max_blocks)
+    held = {}                             # slot -> set of pages
+
+    def check():
+        live = [p for pages in held.values() for p in pages]
+        # no page granted twice, none of them parking, none leaked
+        assert len(live) == len(set(live))
+        assert 0 not in live
+        assert all(1 <= p < n_pages for p in live)
+        assert pool.n_free + len(live) == n_pages - 1
+        assert sorted(set(pool._free)) == sorted(pool._free)
+        assert set(pool._free).isdisjoint(live) and 0 not in pool._free
+        for slot in range(n_slots):
+            n = int(pool.n_blocks[slot])
+            assert set(pool.tables[slot, :n].tolist()) \
+                == held.get(slot, set())
+            # unallocated tail always points at parking
+            assert set(pool.tables[slot, n:].tolist()) <= {0}
+
+    for _ in range(2000):
+        op = rng.integers(3)
+        if op == 0:                       # admit into a free slot
+            free = [s for s in range(n_slots) if s not in held]
+            if free:
+                slot = int(rng.choice(free))
+                want = int(rng.integers(1, max_blocks * page_size + 1))
+                if pool.allocate(slot, want):
+                    n = int(pool.n_blocks[slot])
+                    held[slot] = set(pool.tables[slot, :n].tolist())
+        elif op == 1 and held:            # retire a finished request
+            slot = int(rng.choice(list(held)))
+            pool.free(slot)
+            del held[slot]
+        elif op == 2 and held:            # backpressure: undo admission
+            slot = int(rng.choice(list(held)))
+            pool.free(slot)               # engine requeue frees the slot
+            del held[slot]
+            # the retried request may need a different page count
+            want = int(rng.integers(1, max_blocks * page_size + 1))
+            if pool.allocate(slot, want):
+                n = int(pool.n_blocks[slot])
+                held[slot] = set(pool.tables[slot, :n].tolist())
+        check()
+    for slot in list(held):
+        pool.free(slot)
+        del held[slot]
+    check()
+    assert pool.n_free == n_pages - 1     # drained: nothing leaked
+
+
 def test_page_pool_fragmentation_stats():
     pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_blocks=4)
     pool.allocate(0, 5)                   # 2 pages for 5 tokens

@@ -12,6 +12,9 @@ Checks all ``docs/*.md`` files:
     - ``make <target>`` with the target defined in the Makefile;
 * ``[[path]]`` artifact references — the path must exist in the working
   tree or be gitignored (artifacts are build products, not tracked);
+* registry coverage — every benchmark registered in ``benchmarks/run.py``
+  must be *mentioned* in ``docs/claims.md`` (a benchmark nobody maps to
+  a claim is a benchmark nobody can interpret or trust);
 * fenced ``json`` blocks that carry a ``schema_version`` key — validated
   as :class:`repro.dvfs.DvfsPlan` documents against the IR schema
   (``repro.dvfs.validate_plan_dict``), so the plan examples embedded in
@@ -186,13 +189,32 @@ def main() -> int:
                     and not _gitignored(path):
                 errors.append(f"{rel}: artifact [[{path}]] neither exists "
                               f"nor is gitignored")
+    # registry coverage: every registered benchmark needs a mention in
+    # the claims map (any textual occurrence of its name counts)
+    claims_path = os.path.join(ROOT, "docs", "claims.md")
+    n_covered = 0
+    if os.path.exists(claims_path):
+        with open(claims_path) as f:
+            claims_text = f.read()
+        for name in sorted(registry):
+            if name in claims_text:
+                n_covered += 1
+            else:
+                errors.append(
+                    f"docs/claims.md: benchmark {name!r} is registered "
+                    f"in benchmarks/run.py but never mentioned — map it "
+                    f"to a claim (or a supporting-sweep note)")
+    else:
+        errors.append("docs/claims.md missing: the benchmark registry "
+                      "has no claims map to be checked against")
     if errors:
         print("docs-check FAILED:", file=sys.stderr)
         for e in errors:
             print("  " + e, file=sys.stderr)
         return 1
     print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
-          f"{n_refs} artifact refs, {n_plans} embedded plan(s) verified")
+          f"{n_refs} artifact refs, {n_plans} embedded plan(s), "
+          f"{n_covered} registered benchmarks covered by claims.md")
     return 0
 
 
