@@ -238,12 +238,16 @@ def plan_phase_bundle(cfg: ModelConfig, chip: Chip, *,
                       planner: Optional[Callable[..., Plan]] = None,
                       seed: int = 0, n_reps: int = 5,
                       tp: int = 1, dp: int = 1,
+                      kv_dtype: Optional[str] = None,
                       meta: Optional[Dict] = None) -> PhasePlanBundle:
     """Measure + plan every serving phase of (cfg, shapes) on ``chip``.
 
     Runs one simulated measurement campaign per phase (prefill at the
     prefill shape's batch, decode once per slot bucket with the bucket as
     the batch) and compiles each plan into a coalesced schedule.
+    ``kv_dtype`` (e.g. ``"int8"``) plans the decode buckets against the
+    quantized page pool's workload model — the cache-read stream at its
+    stored width — so the plan tracks the shifted decode roofline.
 
     By default phases are planned with
     :func:`~repro.core.coalesce.coalesced_global_plan`, which charges clock
@@ -260,17 +264,20 @@ def plan_phase_bundle(cfg: ModelConfig, chip: Chip, *,
     def plan_one(name: str, kernels: List[KernelSpec]) -> PhasePlan:
         return compile_phase(camp.run(kernels), name, chip, policy, planner)
 
-    pre_kernels = WorkloadBuilder(cfg, prefill_shape, tp=tp, dp=dp).build()
+    pre_kernels = WorkloadBuilder(cfg, prefill_shape, tp=tp, dp=dp,
+                                  kv_dtype=kv_dtype).build()
     prefill = plan_one("prefill", pre_kernels)
     decode: Dict[int, PhasePlan] = {}
     for b in decode_slot_buckets(n_slots):
         kernels = WorkloadBuilder(cfg, decode_shape, tp=tp, dp=dp,
-                                  batch_override=b).build()
+                                  batch_override=b,
+                                  kv_dtype=kv_dtype).build()
         decode[b] = plan_one(f"decode@{b}", kernels)
     md = dict(meta or {})
     md.update({"model": cfg.name, "tau": policy.tau, "n_slots": n_slots,
                "prefill_shape": prefill_shape.name,
-               "decode_shape": decode_shape.name})
+               "decode_shape": decode_shape.name,
+               "kv_dtype": kv_dtype or "none"})
     return PhasePlanBundle(chip_name=chip.name, prefill=prefill,
                            decode=decode, meta=md)
 

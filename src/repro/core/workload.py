@@ -24,6 +24,17 @@ def _ceil_div(a, b):
     return -(-a // b)
 
 
+def _kv_dtype_bytes(kv_dtype: Optional[str], dtype_bytes: int) -> int:
+    """Stored bytes per paged-KV element.  Mirrors
+    :func:`repro.serve.kv_pages.kv_dtype_bytes` without importing the
+    serve layer (core must stay importable without it)."""
+    if kv_dtype in (None, "none", "bf16", "fp16", "float32"):
+        return dtype_bytes
+    if kv_dtype in ("int8", "fp8_e4m3"):
+        return 1
+    raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+
+
 class WorkloadBuilder:
     """Builds the ordered kernel list for one iteration of (cfg, shape)."""
 
@@ -31,10 +42,18 @@ class WorkloadBuilder:
                  dtype_bytes: int = 2, tp: int = 1, sp: bool = False,
                  dp: int = 1, include_comm: bool = False,
                  include_optimizer: bool = False,
-                 batch_override: Optional[int] = None):
+                 batch_override: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.cfg = cfg
         self.shape = shape
         self.db = dtype_bytes
+        # bytes per *stored* paged-KV element: a quantized serve cache
+        # (int8/fp8 page pools) halves the decode cache-read stream while
+        # activations/weights stay at dtype_bytes — the decode roofline
+        # shift the planner must see.  Dense cross-attention K/V (encdec)
+        # is not paged and stays at dtype_bytes.
+        self.kv_db = _kv_dtype_bytes(kv_dtype, dtype_bytes)
+        self.kv_dtype = kv_dtype or "none"
         self.tp = max(tp, 1)
         self.sp = sp
         self.include_comm = include_comm
@@ -473,10 +492,13 @@ class WorkloadBuilder:
                 plans = [("", att_inv, S)]
             for prefix, inv, S_eff in plans:
                 gemv(f"{prefix}GEMV qkv", (H + 2 * KVh) * hd, d_in, inv=inv)
-                # cache-read attention: streams the whole KV cache
+                # cache-read attention: streams the whole KV cache at its
+                # *stored* width (kv_db < db under a quantized page pool —
+                # the kernel's arithmetic intensity rises accordingly;
+                # per-page scale reads are < 0.5% of payload and elided)
                 self._emit(f"{prefix}Attn cache read", "attn_decode",
                            4.0 * B * H * S_eff * hd,
-                           db * 2 * B * S_eff * KVh * hd, inv=inv)
+                           self.kv_db * 2 * B * S_eff * KVh * hd, inv=inv)
                 gemv(f"{prefix}GEMV attn proj", d, H * hd, inv=inv)
             if cfg.family == "encdec":
                 F = cfg.encoder_frontend_len

@@ -113,15 +113,20 @@ class DvfsSession:
     def plan_serve(self, cfg: ModelConfig, *, n_slots: int,
                    prefill_shape: ShapeConfig, decode_shape: ShapeConfig,
                    tp: int = 1, dp: int = 1,
+                   kv_dtype: Optional[str] = None,
                    meta: Optional[Dict] = None) -> DvfsPlan:
         """Campaign + plan every serving phase (prefill, decode buckets)
-        with this session's governor; adopts and returns the plan."""
+        with this session's governor; adopts and returns the plan.
+        ``kv_dtype`` plans against a quantized KV page pool's workload
+        model (the engine serving that pool should be built with the same
+        ``kv_dtype``)."""
         t0 = time.perf_counter()
         bundle = plan_phase_bundle(
             cfg, self.chip, n_slots=n_slots, prefill_shape=prefill_shape,
             decode_shape=decode_shape, policy=self.policy,
             planner=self.governor.phase_planner, seed=self.seed,
-            n_reps=self.n_reps, tp=tp, dp=dp, meta=meta)
+            n_reps=self.n_reps, tp=tp, dp=dp, kv_dtype=kv_dtype,
+            meta=meta)
         self.planner_wall_s += time.perf_counter() - t0
         plan = DvfsPlan.from_phase_bundle(bundle)
         plan.meta["governor"] = self.governor.name
@@ -133,7 +138,8 @@ class DvfsSession:
                 and not getattr(self.governor, "tables", None):
             def _measure_bucket(b: int) -> MeasurementTable:
                 kernels = WorkloadBuilder(cfg, decode_shape, tp=tp, dp=dp,
-                                          batch_override=b).build()
+                                          batch_override=b,
+                                          kv_dtype=kv_dtype).build()
                 return Campaign(self.chip, seed=self.seed,
                                 n_reps=self.n_reps).run(kernels)
             self.governor.table_provider = _measure_bucket

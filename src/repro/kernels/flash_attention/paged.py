@@ -22,6 +22,13 @@ forward.  Unallocated table entries must point at a *valid* page index
 Tiling note: the per-program MXU shapes are (G x D) @ (D x page) — small
 for GQA groups; correctness-first (validated in interpret mode on CPU via
 ``tests``), production tiling would fold slots into the sublane dim.
+
+**Quantized pools.**  With ``k_scales``/``v_scales`` (P, KV) float32 the
+pools hold int8/fp8 values; the scales ride in as two extra VMEM side
+inputs whose BlockSpec index map is the *same* ``tbl[b, j]`` lookup as
+the page DMA, so each program sees exactly its page's (1, 1) scale.  K/V
+are dequantized in-register right after the VMEM load — HBM moves the
+quantized bytes, and no fp copy of the pool is ever materialized.
 """
 from __future__ import annotations
 
@@ -35,9 +42,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, scale: float,
-                         page_size: int, window: int, softcap: float):
+def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, page_size: int, window: int,
+                         softcap: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -51,6 +62,11 @@ def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (page, D)
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if quantized:
+        # fused dequant: one (page, KV-head) scale per program, indexed
+        # by the same tbl[b, j] map that steered the page DMA
+        k = k * ks_ref[0, 0]
+        v = v * vs_ref[0, 0]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, page)
@@ -85,6 +101,7 @@ def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_flash_decode(q, k_pages, v_pages, block_tables, pos, *,
                        window: int = 0, softcap: float = 0.0,
+                       k_scales=None, v_scales=None,
                        interpret: bool = False):
     """Single-token paged attention.
 
@@ -92,6 +109,8 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, pos, *,
     block_tables: (B, nb) int32 page ids (unallocated entries must hold a
     valid page id — they are masked by position); pos: (B,) absolute
     position of the incoming token (cache entries > pos are invalid).
+    With ``k_scales``/``v_scales`` (P, KV) float32 the pools hold
+    quantized values, dequantized in-register (see module docstring).
     Returns (B, 1, H, D).
     """
     B, _, H, D = q.shape
@@ -100,21 +119,31 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, pos, *,
     nb = block_tables.shape[1]
     qr = q.reshape(B, KV, G, D)
     scale = D ** -0.5
+    quantized = k_scales is not None
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=scale, page_size=page, window=window,
-        softcap=softcap)
+        softcap=softcap, quantized=quantized)
+    page_spec = pl.BlockSpec((1, page, 1, D),
+                             lambda b, h, j, tbl, ps: (tbl[b, j], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda b, h, j, tbl, ps: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qr, k_pages, v_pages]
+    if quantized:
+        # the scale side inputs reuse the page DMA's tbl[b, j] steering
+        scale_spec = pl.BlockSpec((1, 1),
+                                  lambda b, h, j, tbl, ps: (tbl[b, j], h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [jnp.asarray(k_scales, jnp.float32),
+                     jnp.asarray(v_scales, jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, j, tbl, ps: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, j, tbl, ps: (tbl[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, j, tbl, ps: (tbl[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, h, j, tbl, ps: (b, h, 0, 0)),
         scratch_shapes=[
@@ -129,5 +158,5 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, pos, *,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
     )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(pos, jnp.int32),
-      qr, k_pages, v_pages)
+      *operands)
     return out.reshape(B, 1, H, D)

@@ -34,20 +34,31 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, pos, *,
-                        window: int = 0, softcap: float = 0.0):
+                        window: int = 0, softcap: float = 0.0,
+                        k_scales=None, v_scales=None):
     """Gather-based oracle for the paged decode kernel.
 
     q: (B, 1, H, D); k_pages, v_pages: (P, page, KV, D);
     block_tables: (B, nb) page ids; pos: (B,).  Materializes each slot's
     gathered KV ``(B, nb*page, KV, D)`` — the contiguous copy the Pallas
-    kernel's DMA-descriptor gather avoids.  Returns (B, 1, H, D).
+    kernel's DMA-descriptor gather avoids.  With ``k_scales``/``v_scales``
+    (P, KV) the pools hold quantized values and the gathered pages are
+    dequantized by their per-(page, KV-head) scale.  Returns (B, 1, H, D).
     """
     B, _, H, D = q.shape
     P, page, KV, _ = k_pages.shape
     G = H // KV
     nb = block_tables.shape[1]
-    k = k_pages[block_tables].reshape(B, nb * page, KV, D)
-    v = v_pages[block_tables].reshape(B, nb * page, KV, D)
+
+    def gather(pages, scales):
+        g = pages[block_tables]                       # (B, nb, page, KV, D)
+        if scales is not None:
+            g = g.astype(jnp.float32) \
+                * scales[block_tables][:, :, None, :, None]
+        return g.reshape(B, nb * page, KV, D)
+
+    k = gather(k_pages, k_scales)
+    v = gather(v_pages, v_scales)
     qr = q.reshape(B, KV, G, D).astype(jnp.float32) * (D ** -0.5)
     s = jnp.einsum("bkgd,bskd->bkgs", qr, k.astype(jnp.float32))
     if softcap > 0:

@@ -244,13 +244,22 @@ class EncDecLM:
             v = jnp.einsum("bsd,dhk->bshk", h,
                            cm.cast(lp["attn"]["wv"], h.dtype))
             if block_tables is not None:
-                kc = cm.paged_cache_write(c["k"], k[:, 0], block_tables,
-                                          pos)
-                vc = cm.paged_cache_write(c["v"], v[:, 0], block_tables,
-                                          pos)
+                ks, vs = c.get("k_scale"), c.get("v_scale")
+                if ks is not None:
+                    kc, ks = cm.paged_cache_write_quant(
+                        c["k"], ks, k[:, 0], block_tables, pos)
+                    vc, vs = cm.paged_cache_write_quant(
+                        c["v"], vs, v[:, 0], block_tables, pos)
+                else:
+                    kc = cm.paged_cache_write(c["k"], k[:, 0],
+                                              block_tables, pos)
+                    vc = cm.paged_cache_write(c["v"], v[:, 0],
+                                              block_tables, pos)
                 o = cm.paged_decode_attention(q, kc, vc, block_tables,
-                                              pos=pos)
+                                              pos=pos, k_scales=ks,
+                                              v_scales=vs)
             else:
+                ks = vs = None
                 kc = c["k"].at[ar, pos].set(k[:, 0])
                 vc = c["v"].at[ar, pos].set(v[:, 0])
                 o = cm.decode_attention(q, kc, vc, pos=pos)
@@ -266,8 +275,11 @@ class EncDecLM:
                                cm.cast(lp["cross"]["wo"], h.dtype))
             h = cm.apply_norm(lp["norm_mlp"], x, cfg.norm)
             x = x + cm.apply_mlp(lp["mlp"], h, cfg.activation)
-            return x, {"k": kc, "v": vc, "cross_k": c["cross_k"],
-                       "cross_v": c["cross_v"]}
+            nc = {"k": kc, "v": vc, "cross_k": c["cross_k"],
+                  "cross_v": c["cross_v"]}
+            if ks is not None:
+                nc["k_scale"], nc["v_scale"] = ks, vs
+            return x, nc
 
         x, new_cache = lax.scan(body, x, (params["dec_layers"], cache))
         x = cm.apply_norm(params["final_norm"], x, cfg.norm)

@@ -110,7 +110,7 @@ class HybridLM:
         return (h, kv) if return_kv else h
 
     def _shared_decode(self, sp: Params, h, emb, kc, vc, pos,
-                       block_tables=None):
+                       block_tables=None, ks=None, vs=None):
         cfg = self.cfg
         B = h.shape[0]
         u = jnp.concatenate([h, emb], axis=-1)
@@ -124,9 +124,16 @@ class HybridLM:
         q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
         k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
         if block_tables is not None:
-            kc = cm.paged_cache_write(kc, k[:, 0], block_tables, pos)
-            vc = cm.paged_cache_write(vc, v[:, 0], block_tables, pos)
-            o = cm.paged_decode_attention(q, kc, vc, block_tables, pos=pos)
+            if ks is not None:
+                kc, ks = cm.paged_cache_write_quant(kc, ks, k[:, 0],
+                                                    block_tables, pos)
+                vc, vs = cm.paged_cache_write_quant(vc, vs, v[:, 0],
+                                                    block_tables, pos)
+            else:
+                kc = cm.paged_cache_write(kc, k[:, 0], block_tables, pos)
+                vc = cm.paged_cache_write(vc, v[:, 0], block_tables, pos)
+            o = cm.paged_decode_attention(q, kc, vc, block_tables, pos=pos,
+                                          k_scales=ks, v_scales=vs)
         else:
             ar = jnp.arange(B)
             kc = kc.at[ar, pos].set(k[:, 0])
@@ -141,7 +148,7 @@ class HybridLM:
                          approximate=True)
         h = h + jnp.einsum("bsf,fd->bsd", ff,
                            cm.cast(sp["mlp"]["w_down"], un.dtype))
-        return h, kc, vc
+        return h, kc, vc, ks, vs
 
     # -- training ----------------------------------------------------------
     def forward_hidden(self, params, x, remat: bool = True):
@@ -306,6 +313,7 @@ class HybridLM:
         glayers = jax.tree.map(
             lambda a: a[:n_scan].reshape((self.n_groups, per) + a.shape[1:]),
             params["layers"])
+        quant = "k_scale" in cache
         gcaches = {
             "ssm": cache["ssm"][:n_scan].reshape(
                 (self.n_groups, per) + cache["ssm"].shape[1:]),
@@ -314,13 +322,19 @@ class HybridLM:
             "k": cache["k"][:self.n_groups],
             "v": cache["v"][:self.n_groups],
         }
+        if quant:
+            gcaches["k_scale"] = cache["k_scale"][:self.n_groups]
+            gcaches["v_scale"] = cache["v_scale"][:self.n_groups]
 
         def group_body(x, inp):
             gp, gc = inp
-            x, kc, vc = self._shared_decode(shared, x, emb, gc["k"],
-                                            gc["v"], pos,
-                                            block_tables=block_tables)
+            x, kc, vc, ks, vs = self._shared_decode(
+                shared, x, emb, gc["k"], gc["v"], pos,
+                block_tables=block_tables, ks=gc.get("k_scale"),
+                vs=gc.get("v_scale"))
             new = {"k": kc, "v": vc, "ssm": [], "conv": []}
+            if ks is not None:
+                new["k_scale"], new["v_scale"] = ks, vs
             for i in range(per):
                 lp = jax.tree.map(lambda a, i=i: a[i], gp)
                 h = cm.apply_norm(lp["norm"], x, cfg.norm)
@@ -341,13 +355,23 @@ class HybridLM:
                                               new_cache["conv"].shape[2:]),
             "k": new_cache["k"], "v": new_cache["v"],
         }
+        if quant:
+            out_cache["k_scale"] = new_cache["k_scale"]
+            out_cache["v_scale"] = new_cache["v_scale"]
         if self.tail:
-            x, kc, vc = self._shared_decode(shared, x, emb,
-                                            cache["k"][self.n_groups],
-                                            cache["v"][self.n_groups], pos,
-                                            block_tables=block_tables)
+            x, kc, vc, ks, vs = self._shared_decode(
+                shared, x, emb, cache["k"][self.n_groups],
+                cache["v"][self.n_groups], pos,
+                block_tables=block_tables,
+                ks=cache["k_scale"][self.n_groups] if quant else None,
+                vs=cache["v_scale"][self.n_groups] if quant else None)
             out_cache["k"] = jnp.concatenate([out_cache["k"], kc[None]])
             out_cache["v"] = jnp.concatenate([out_cache["v"], vc[None]])
+            if quant:
+                out_cache["k_scale"] = jnp.concatenate(
+                    [out_cache["k_scale"], ks[None]])
+                out_cache["v_scale"] = jnp.concatenate(
+                    [out_cache["v_scale"], vs[None]])
             ssm_t, conv_t = [], []
             for i in range(n_scan, cfg.n_layers):
                 lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])

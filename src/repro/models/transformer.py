@@ -367,7 +367,7 @@ class DecoderLM:
             params["layers"])
         arangeB = jnp.arange(B)
 
-        def one_attn(lp, x, kc, vc, window, ring: bool):
+        def one_attn(lp, x, kc, vc, window, ring: bool, ks=None, vs=None):
             paged = block_tables is not None and not ring
             h = cm.apply_norm(lp["norm_attn"], x, cfg.norm)
             q = jnp.einsum("bsd,dhk->bshk", h, cm.cast(lp["attn"]["wq"],
@@ -380,10 +380,19 @@ class DecoderLM:
                 q = cm.apply_rope(q, pos[:, None], cfg.rope_theta)
                 k = cm.apply_rope(k, pos[:, None], cfg.rope_theta)
             if paged:
-                kc = cm.paged_cache_write(kc, k[:, 0], block_tables, pos)
-                vc = cm.paged_cache_write(vc, v[:, 0], block_tables, pos)
+                if ks is not None:
+                    kc, ks = cm.paged_cache_write_quant(kc, ks, k[:, 0],
+                                                        block_tables, pos)
+                    vc, vs = cm.paged_cache_write_quant(vc, vs, v[:, 0],
+                                                        block_tables, pos)
+                else:
+                    kc = cm.paged_cache_write(kc, k[:, 0], block_tables,
+                                              pos)
+                    vc = cm.paged_cache_write(vc, v[:, 0], block_tables,
+                                              pos)
                 o = cm.paged_decode_attention(q, kc, vc, block_tables,
-                                              pos=pos, window=window)
+                                              pos=pos, window=window,
+                                              k_scales=ks, v_scales=vs)
             else:
                 slot = pos % kc.shape[1] if ring else pos
                 kc = kc.at[arangeB, slot].set(k[:, 0])
@@ -409,33 +418,41 @@ class DecoderLM:
                     shared_expert=cfg.moe.shared_expert, drop=False)
             else:
                 h = cm.apply_mlp(lp["mlp"], h, cfg.activation)
-            return x + h, kc, vc
+            return x + h, kc, vc, ks, vs
 
         def group_body(x, scanned):
             gp, gcache = scanned
             new_cache = dict(gcache)
             if self.group == 1:
                 lp = jax.tree.map(lambda a: a[0], gp)
-                x, kc, vc = one_attn(lp, x, gcache["k"], gcache["v"],
-                                     0, ring=False)
+                x, kc, vc, ks, vs = one_attn(
+                    lp, x, gcache["k"], gcache["v"], 0, ring=False,
+                    ks=gcache.get("k_scale"), vs=gcache.get("v_scale"))
                 new_cache["k"], new_cache["v"] = kc, vc
+                if ks is not None:
+                    new_cache["k_scale"], new_cache["v_scale"] = ks, vs
             else:
                 kls, vls = [], []
                 for i in range(self.group):
                     lp = jax.tree.map(lambda a, i=i: a[i], gp)
                     window = self._layer_window(i)
                     if window:
-                        x, kc, vc = one_attn(lp, x, gcache["k_local"][i],
-                                             gcache["v_local"][i], window,
-                                             ring=True)
+                        x, kc, vc, _, _ = one_attn(
+                            lp, x, gcache["k_local"][i],
+                            gcache["v_local"][i], window, ring=True)
                         kls.append(kc)
                         vls.append(vc)
                     else:
-                        x, kc, vc = one_attn(lp, x, gcache["k_global"],
-                                             gcache["v_global"], 0,
-                                             ring=False)
+                        x, kc, vc, ks, vs = one_attn(
+                            lp, x, gcache["k_global"], gcache["v_global"],
+                            0, ring=False,
+                            ks=gcache.get("k_global_scale"),
+                            vs=gcache.get("v_global_scale"))
                         new_cache["k_global"] = kc
                         new_cache["v_global"] = vc
+                        if ks is not None:
+                            new_cache["k_global_scale"] = ks
+                            new_cache["v_global_scale"] = vs
                 new_cache["k_local"] = jnp.stack(kls)
                 new_cache["v_local"] = jnp.stack(vls)
             return x, new_cache

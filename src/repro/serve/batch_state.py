@@ -31,11 +31,24 @@ class BatchState:
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.cache = model.init_cache(n_slots, max_seq)
+        # the unbounded (max_seq-proportional) attention-KV leaves — the
+        # ones a paged layout would pool; dense SSM/conv/ring/cross state
+        # is excluded from KV accounting
+        self._kv_keys = set(model.paged_cache_keys())
         self.tokens = jnp.zeros((n_slots,), jnp.int32)   # last sampled
         self.pos = jnp.zeros((n_slots,), jnp.int32)      # its position
         self.remaining = jnp.zeros((n_slots,), jnp.int32)
 
     def kv_hbm_bytes(self) -> int:
+        """Bytes of the unbounded attention-KV leaves only — comparable
+        across dense and paged layouts (see
+        :meth:`~repro.serve.kv_pages.PagedBatchState.kv_hbm_bytes`)."""
+        return sum(a.size * a.dtype.itemsize
+                   for k, a in self.cache.items() if k in self._kv_keys)
+
+    def cache_hbm_bytes(self) -> int:
+        """Bytes of every cache leaf (KV plus dense SSM/conv/ring/cross
+        state)."""
         import jax
         return sum(a.size * a.dtype.itemsize
                    for a in jax.tree.leaves(self.cache))

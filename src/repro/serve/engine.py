@@ -54,7 +54,7 @@ import numpy as np
 from jax import lax
 
 from .batch_state import BatchState
-from .kv_pages import PagedBatchState, write_prefill_pages
+from .kv_pages import PagedBatchState, scale_key, write_prefill_pages
 from .scheduler import Scheduler
 from ..models import common as cm
 
@@ -107,7 +107,8 @@ class ServeEngine:
                  max_seq: int = 512, temperature: float = 0.0,
                  seed: int = 0, executor=None, max_chunk: int = 16,
                  eos_token: Optional[int] = None, paged: bool = False,
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -121,9 +122,13 @@ class ServeEngine:
         self.paged = paged
         self.page_size = page_size
         self.n_pages = n_pages
+        self.kv_dtype = kv_dtype
         if paged and max_seq % page_size:
             raise ValueError(f"paged engine needs max_seq ({max_seq}) to "
                              f"be a multiple of page_size ({page_size})")
+        if kv_dtype not in (None, "none") and not paged:
+            raise ValueError("kv_dtype quantization needs paged=True "
+                             "(only page pools carry scale tables)")
         self.scheduler = Scheduler(batch_slots)
         self.state = self._new_state()
         self.n_decode_steps = 0           # jitted chunk-steps executed
@@ -140,7 +145,8 @@ class ServeEngine:
         if self.paged:
             return PagedBatchState(self.model, self.slots, self.max_seq,
                                    page_size=self.page_size,
-                                   n_pages=self.n_pages)
+                                   n_pages=self.n_pages,
+                                   kv_dtype=self.kv_dtype)
         return BatchState(self.model, self.slots, self.max_seq)
 
     def reset(self) -> None:
@@ -214,11 +220,23 @@ class ServeEngine:
         axes = self.model.cache_slot_axes()
         if tables_sub is not None:
             paged_keys = set(self.model.paged_cache_keys())
+            scale_keys = {scale_key(k) for k in paged_keys}
             new_cache = {}
             for k in cache:
                 if k in paged_keys:
-                    new_cache[k] = write_prefill_pages(cache[k], sub[k],
-                                                       tables_sub)
+                    sk = scale_key(k)
+                    if sk in cache:
+                        # quantized pool: the page write derives fresh
+                        # per-(page, KV-head) scales alongside the payload
+                        new_cache[k], new_cache[sk] = write_prefill_pages(
+                            cache[k], sub[k], tables_sub,
+                            scales=cache[sk],
+                            qmax=cm.kv_qmax(cache[k].dtype))
+                    else:
+                        new_cache[k] = write_prefill_pages(
+                            cache[k], sub[k], tables_sub)
+                elif k in scale_keys:
+                    pass              # written alongside its base leaf
                 else:
                     new_cache[k] = cm.write_cache_slots(
                         {k: cache[k]}, {k: sub[k]}, slots,

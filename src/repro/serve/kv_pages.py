@@ -32,13 +32,81 @@ the decode scan — keeps re-writing its parked token's K/V through its
 block table; once its pages are freed (and possibly re-allocated to a new
 request), that write must land somewhere harmless.  Parking absorbs it:
 freed rows point at page 0, which no live request ever reads.
+
+**Quantized page pools** (``kv_dtype``).  The paged leaves may be stored
+in ``int8`` (or ``fp8_e4m3`` where the JAX dtype exists) instead of the
+model's compute dtype.  Each pool leaf ``k`` then carries a sibling scale
+leaf ``k_scale`` of shape ``(leading, n_pages, KV)`` float32 — **one
+absmax scale per (page, KV-head)** — that rides the cache dict through
+``lax.scan`` over layers, jit donation, and slot plumbing unchanged.
+Writers quantize (:func:`write_prefill_pages` per prefilled page;
+``models.common.paged_cache_write_quant`` per decode token, widening the
+page scale monotonically within a page and re-quantizing in-register);
+readers dequantize fused into the attention kernel
+(``kernels.flash_attention.paged``) so HBM moves half the bytes with no
+materialized fp copy.  Scale-leaf overhead is ``4 / (page_size * D)`` of
+the payload (<0.5% at the default 16×64 pages) and is charged to
+:meth:`PagedBatchState.kv_hbm_bytes` so capacity claims account for it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+# kv_dtype name -> (storage dtype, qmax).  qmax is the clip point the
+# absmax maps onto: int8 uses the full symmetric grid; fp8-e4m3 uses its
+# max finite (448).  fp8 is gated on the running JAX exposing the dtype —
+# older versions simply don't list it (no new dependency, no hard fail).
+KV_DTYPES: Dict[str, Tuple] = {"int8": (jnp.int8, 127.0)}
+if hasattr(jnp, "float8_e4m3fn"):
+    KV_DTYPES["fp8_e4m3"] = (jnp.float8_e4m3fn, 448.0)
+
+# names that mean "store the compute dtype, no scales"
+_UNQUANTIZED = (None, "none", "bf16", "fp16", "float32")
+
+
+def resolve_kv_dtype(kv_dtype):
+    """Map a ``kv_dtype`` name to ``(storage_dtype, qmax)`` or ``None``
+    for the unquantized path.  Raises on unknown names and on fp8 when
+    this JAX build lacks ``float8_e4m3fn``."""
+    if kv_dtype in _UNQUANTIZED:
+        return None
+    if kv_dtype == "fp8_e4m3" and "fp8_e4m3" not in KV_DTYPES:
+        raise ValueError("kv_dtype='fp8_e4m3' needs jnp.float8_e4m3fn, "
+                         "which this JAX build does not expose")
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; expected one of "
+                         f"{sorted(KV_DTYPES)} or bf16/none")
+    return KV_DTYPES[kv_dtype]
+
+
+def kv_dtype_bytes(kv_dtype, dtype_bytes: int = 2) -> int:
+    """Bytes per stored KV element under ``kv_dtype`` (``dtype_bytes``
+    for the unquantized path) — the single number the analytic workload
+    model needs to move the decode roofline."""
+    info = resolve_kv_dtype(kv_dtype)
+    return dtype_bytes if info is None else jnp.dtype(info[0]).itemsize
+
+
+def scale_key(key: str) -> str:
+    """Name of the per-page scale leaf that travels with pool leaf
+    ``key`` through the cache dict."""
+    return f"{key}_scale"
+
+
+def quantize_to(x: jnp.ndarray, scale: jnp.ndarray, dtype,
+                qmax: float) -> jnp.ndarray:
+    """Quantize ``x`` by broadcastable ``scale`` into ``dtype``.
+
+    Integer targets round-to-nearest then clip to the symmetric grid;
+    float8 targets clip to the max finite and let the cast round.
+    """
+    y = x.astype(jnp.float32) / scale
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        y = jnp.round(y)
+    return jnp.clip(y, -qmax, qmax).astype(dtype)
 
 
 class PagePool:
@@ -61,6 +129,10 @@ class PagePool:
         self.n_blocks = np.zeros(n_slots, np.int32)     # allocated per slot
         self.used_tokens = np.zeros(n_slots, np.int64)  # capacity actually
         #                                               # needed (frag stat)
+        self._peak_allocated = 0    # high-water mark of allocated pages
+        # bumped on every successful allocate/free; device-table mirrors
+        # compare against it to skip redundant host->device uploads
+        self.version = 0
 
     # -- allocator --------------------------------------------------------
     @property
@@ -87,6 +159,9 @@ class PagePool:
         self.tables[slot, need:] = 0
         self.n_blocks[slot] = need
         self.used_tokens[slot] = int(n_tokens)
+        self._peak_allocated = max(self._peak_allocated,
+                                   int(self.n_blocks.sum()))
+        self.version += 1
         return True
 
     def free(self, slot: int) -> None:
@@ -98,17 +173,20 @@ class PagePool:
         self.tables[slot, :] = 0
         self.n_blocks[slot] = 0
         self.used_tokens[slot] = 0
+        self.version += 1
 
     # -- accounting -------------------------------------------------------
     def stats(self) -> Dict:
         """Occupancy + internal fragmentation (allocated-but-unneeded
         token capacity; pages are fixed-size, so there is no external
-        fragmentation by construction)."""
+        fragmentation by construction).  ``peak_allocated_pages`` is the
+        lifetime high-water mark — the number capacity claims cite."""
         allocated = int(self.n_blocks.sum())
         cap = allocated * self.page_size
         used = int(self.used_tokens.sum())
         return {"n_pages": self.n_pages, "page_size": self.page_size,
                 "allocated_pages": allocated, "free_pages": self.n_free,
+                "peak_allocated_pages": self._peak_allocated,
                 "used_tokens": used,
                 "internal_frag_tokens": cap - used,
                 "internal_frag_frac": (cap - used) / cap if cap else 0.0}
@@ -119,14 +197,20 @@ class PagedBatchState:
 
     Duck-types :class:`~repro.serve.batch_state.BatchState` for the engine
     (``cache`` / ``tokens`` / ``pos`` / ``remaining``), adding the page
-    pool, the block tables' device mirror, and HBM accounting.
+    pool, the block tables' device mirror, and HBM accounting.  With a
+    quantized ``kv_dtype``, every paged leaf stores ``kv_dtype`` values
+    and carries a float32 per-(page, KV-head) scale sibling (see module
+    docstring).
     """
 
     def __init__(self, model, n_slots: int, max_seq: int,
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.page_size = page_size
+        self.kv_dtype = kv_dtype if kv_dtype is not None else "none"
+        self.quant = resolve_kv_dtype(kv_dtype)
         self.paged_keys = list(model.paged_cache_keys())
         max_blocks = max(-(-max_seq // page_size), 1)
         if n_pages is None:
@@ -142,7 +226,15 @@ class PagedBatchState:
                 # (..., n_slots@1, max_seq@2, KV, D)
                 #   -> (..., n_pages@1, page_size@2, KV, D)
                 shape = (s.shape[0], n_pages, page_size) + s.shape[3:]
-                cache[key] = jnp.zeros(shape, s.dtype)
+                if self.quant is None:
+                    cache[key] = jnp.zeros(shape, s.dtype)
+                else:
+                    cache[key] = jnp.zeros(shape, self.quant[0])
+                    # one scale per (page, KV-head); zero-init reads as
+                    # exact-zero K/V, and writers never divide by a
+                    # stored scale (absmax is re-derived on write)
+                    cache[scale_key(key)] = jnp.zeros(
+                        (s.shape[0], n_pages, s.shape[3]), jnp.float32)
             else:
                 cache[key] = jnp.zeros(s.shape, s.dtype)
         self.cache = cache
@@ -150,27 +242,64 @@ class PagedBatchState:
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.remaining = jnp.zeros((n_slots,), jnp.int32)
         self.tables_dev = jnp.asarray(self.pool.tables)
+        self._synced_version = self.pool.version
 
     def sync_tables(self) -> None:
-        """Refresh the device mirror after host-side (de)allocations."""
+        """Refresh the device mirror after host-side (de)allocations.
+
+        No-op when the pool's allocation version has not moved since the
+        last sync — callers on the admission path may call this
+        unconditionally without paying a host->device transfer per round.
+        """
+        if self._synced_version == self.pool.version:
+            return
         self.tables_dev = jnp.asarray(self.pool.tables)
+        self._synced_version = self.pool.version
 
     def kv_hbm_bytes(self) -> int:
+        """Bytes of the *paged* attention-KV pools (payload + scale
+        leaves) — the quantity capacity claims compare.  Dense leaves
+        (SSM/conv state, ring buffers, cross K/V) are excluded; see
+        :meth:`cache_hbm_bytes` for the whole cache."""
+        paged = set(self.paged_keys)
+        paged |= {scale_key(k) for k in self.paged_keys}
+        return sum(a.size * a.dtype.itemsize
+                   for k, a in self.cache.items() if k in paged)
+
+    def cache_hbm_bytes(self) -> int:
+        """Bytes of every cache leaf (paged pools, scales, and dense
+        SSM/conv/ring/cross state)."""
         return sum(a.size * a.dtype.itemsize for a in self.cache.values())
 
 
 def write_prefill_pages(pool_leaf: jnp.ndarray, sub_leaf: jnp.ndarray,
-                        tables_sub: jnp.ndarray) -> jnp.ndarray:
+                        tables_sub: jnp.ndarray,
+                        scales: Optional[jnp.ndarray] = None,
+                        qmax: float = 0.0):
     """Scatter an admitted batch's prefilled KV into its pages.
 
     pool_leaf: (L, P, page, KV, D); sub_leaf: (L, N, S, KV, D) with S a
     multiple of page; tables_sub: (N, S//page) page ids per admitted row.
     Rows of dummy admissions carry out-of-range ids and are dropped.
+
+    With ``scales`` (L, P, KV) the pool is quantized: each written page
+    gets a fresh per-(page, KV-head) absmax scale (right-padding inside a
+    partially filled page is included in the absmax — it only widens the
+    scale, never corrupts valid entries) and the call returns
+    ``(pool_leaf, scales)`` instead of the bare leaf.
     """
     L, N, S = sub_leaf.shape[:3]
     page = pool_leaf.shape[2]
     nb = S // page
     blocks = sub_leaf.reshape((L, N * nb, page) + sub_leaf.shape[3:])
     flat = tables_sub.reshape(N * nb)
-    return pool_leaf.at[:, flat].set(blocks.astype(pool_leaf.dtype),
-                                     mode="drop")
+    if scales is None:
+        return pool_leaf.at[:, flat].set(blocks.astype(pool_leaf.dtype),
+                                         mode="drop")
+    absmax = jnp.max(jnp.abs(blocks.astype(jnp.float32)),
+                     axis=(2, 4))                        # (L, N*nb, KV)
+    new_scale = jnp.maximum(absmax / qmax, 1e-8)
+    q = quantize_to(blocks, new_scale[:, :, None, :, None],
+                    pool_leaf.dtype, qmax)
+    return (pool_leaf.at[:, flat].set(q, mode="drop"),
+            scales.at[:, flat].set(new_scale, mode="drop"))
