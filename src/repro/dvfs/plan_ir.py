@@ -42,6 +42,9 @@ SCOPES = ("serve-prefill", "serve-decode", "train-fwd", "train-bwd",
           "train-opt", "iteration")
 KINDS = ("serve", "train", "iteration")
 
+# phase roles a serve plan (and the replica running it) can specialize to
+PHASE_ROLES = ("unified", "prefill", "decode")
+
 
 def _granularity_from_meta(meta: Dict) -> str:
     """Classify a schedule by the planner name recorded in its meta."""
@@ -286,6 +289,44 @@ class DvfsPlan:
         phases = {s.name: s.to_phase_plan() for s in self.segments}
         return TrainPlanBundle(chip_name=self.chip_name, phases=phases,
                                meta=dict(self.meta))
+
+
+def derive_role_plan(plan: DvfsPlan, role: str) -> DvfsPlan:
+    """Phase-specialize a unified serve plan for a disaggregated pool.
+
+    ``role="prefill"`` keeps only the ``serve-prefill`` segments — the
+    replica never decodes, so its plan is purely compute-tilted and the
+    dropped decode segments can't dilute the governor's frontier.
+    ``role="decode"`` keeps every segment (a decode replica still prices
+    admission via the prefill segment's timing) but stamps the role so
+    governors treat its frontier as memory-tilted.  ``role="unified"``
+    returns the plan unchanged.  Derived plans record ``meta["role"]``
+    and pin ``meta["n_slots"]`` (prefill-only plans lose the decode
+    buckets that other layers read the slot count from).
+    """
+    if role not in PHASE_ROLES:
+        raise ValueError(f"unknown phase role {role!r}; expected one of "
+                         f"{PHASE_ROLES}")
+    if plan.kind != "serve":
+        raise ValueError(f"kind={plan.kind!r} plan has no phase roles")
+    if role == "unified":
+        return plan
+    n_slots = int(plan.meta.get("n_slots", 0)) \
+        or (max(plan.decode_buckets) if plan.decode_buckets else 0)
+    segments = list(plan.segments)
+    meta = {**plan.meta, "role": role}
+    if role == "prefill":
+        segments = [s for s in segments if s.scope == "serve-prefill"]
+        if not segments:
+            raise ValueError("plan has no serve-prefill segment to keep")
+        # a decode mix is meaningless on (and would confuse governors of)
+        # a pool that never decodes
+        meta.pop("decode_mix", None)
+    if n_slots:
+        meta["n_slots"] = n_slots
+    return DvfsPlan(chip_name=plan.chip_name, kind="serve",
+                    segments=segments, meta=meta,
+                    schema_version=plan.schema_version)
 
 
 def validate_plan_dict(d: Dict) -> List[str]:

@@ -41,7 +41,7 @@ from ..core.workload import WorkloadBuilder
 from .executor import (GovernorExecutor, ServeGovernorExecutor,
                        TrainGovernorExecutor)
 from .governors import BaseGovernor, governor as make_governor
-from .plan_ir import DvfsPlan
+from .plan_ir import DvfsPlan, derive_role_plan
 
 
 class DvfsSession:
@@ -114,12 +114,17 @@ class DvfsSession:
                    prefill_shape: ShapeConfig, decode_shape: ShapeConfig,
                    tp: int = 1, dp: int = 1,
                    kv_dtype: Optional[str] = None,
+                   role: str = "unified",
                    meta: Optional[Dict] = None) -> DvfsPlan:
         """Campaign + plan every serving phase (prefill, decode buckets)
         with this session's governor; adopts and returns the plan.
         ``kv_dtype`` plans against a quantized KV page pool's workload
         model (the engine serving that pool should be built with the same
-        ``kv_dtype``)."""
+        ``kv_dtype``).  ``role`` phase-specializes the plan for a
+        disaggregated pool (see :func:`~repro.dvfs.plan_ir
+        .derive_role_plan`): prefill replicas keep only the
+        compute-tilted prefill segment, decode replicas stamp their
+        memory-tilted role."""
         t0 = time.perf_counter()
         bundle = plan_phase_bundle(
             cfg, self.chip, n_slots=n_slots, prefill_shape=prefill_shape,
@@ -129,6 +134,9 @@ class DvfsSession:
             meta=meta)
         self.planner_wall_s += time.perf_counter() - t0
         plan = DvfsPlan.from_phase_bundle(bundle)
+        plan.meta.setdefault("n_slots", int(n_slots))
+        if role != "unified":
+            plan = derive_role_plan(plan, role)
         plan.meta["governor"] = self.governor.name
         # online governor: perf-drift re-planning re-measures the decode
         # workload through this provider (mix-drift re-plans reuse the

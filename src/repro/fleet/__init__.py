@@ -11,23 +11,26 @@ path) and fleet metering (joules/token, p50/p99 TTFT/TPOT).
 """
 from .traces import (ARRIVALS, Trace, TraceRequest, generate_trace,
                      register_arrivals)
-from .replica import ACTIVE, DRAINING, PARKED, Replica, RequestState
+from .replica import (ACTIVE, DECODE, DRAINING, PARKED, PREFILL, UNIFIED,
+                      Replica, RequestState)
 from .router import (ROUTERS, BaseRouter, EnergySloRouter,
                      LeastQueueRouter, RoundRobinRouter, register_router,
                      router)
 from .governor import TAU_SWEEP, FleetGovernor, FrontierPoint
-from .metering import fleet_report, latency_stats, power_stats
+from .metering import (TransferCostModel, fleet_report, kv_bytes_per_token,
+                       latency_stats, migration_stats, power_stats)
 from .cluster import (Fleet, ReplicaSpec, build_fleet, build_replica,
                       decode_tables, default_serve_shapes,
                       parse_replica_specs)
 
 __all__ = [
     "ARRIVALS", "Trace", "TraceRequest", "generate_trace",
-    "register_arrivals", "ACTIVE", "DRAINING", "PARKED", "Replica",
-    "RequestState", "ROUTERS", "BaseRouter", "RoundRobinRouter",
-    "LeastQueueRouter", "EnergySloRouter", "register_router", "router",
-    "TAU_SWEEP", "FleetGovernor", "FrontierPoint", "fleet_report",
-    "latency_stats", "power_stats", "Fleet", "ReplicaSpec", "build_fleet",
-    "build_replica", "decode_tables", "default_serve_shapes",
-    "parse_replica_specs",
+    "register_arrivals", "ACTIVE", "DRAINING", "PARKED", "PREFILL",
+    "DECODE", "UNIFIED", "Replica", "RequestState", "ROUTERS",
+    "BaseRouter", "RoundRobinRouter", "LeastQueueRouter",
+    "EnergySloRouter", "register_router", "router", "TAU_SWEEP",
+    "FleetGovernor", "FrontierPoint", "TransferCostModel", "fleet_report",
+    "kv_bytes_per_token", "latency_stats", "migration_stats",
+    "power_stats", "Fleet", "ReplicaSpec", "build_fleet", "build_replica",
+    "decode_tables", "default_serve_shapes", "parse_replica_specs",
 ]

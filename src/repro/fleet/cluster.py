@@ -22,6 +22,7 @@ heterogeneous fleets.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -29,11 +30,12 @@ from ..configs.base import ModelConfig, ShapeConfig
 from ..core.measure import Campaign, MeasurementTable
 from ..core.workload import WorkloadBuilder, decode_slot_buckets
 from ..dvfs.governors import governor as make_governor
-from ..dvfs.plan_ir import DvfsPlan
+from ..dvfs.plan_ir import PHASE_ROLES, DvfsPlan, derive_role_plan
 from ..dvfs.session import DvfsSession
 from .governor import FleetGovernor
-from .metering import LOADED_UTIL_MIN, fleet_report
-from .replica import ACTIVE, Replica, RequestState
+from .metering import (LOADED_UTIL_MIN, TransferCostModel, fleet_report,
+                       kv_bytes_per_token)
+from .replica import ACTIVE, DECODE, PREFILL, Replica, RequestState
 from .router import BaseRouter, router as make_router
 from .traces import Trace
 
@@ -46,6 +48,14 @@ class ReplicaSpec:
     n_slots: int = 4
     tau: float = 0.005
     governor: str = "online"
+    #: phase role for disaggregated serving: "unified" serves both
+    #: phases; "prefill"/"decode" replicas form the two-stage pools
+    role: str = "unified"
+
+    def __post_init__(self):
+        if self.role not in PHASE_ROLES:
+            raise ValueError(f"unknown replica role {self.role!r}; "
+                             f"expected one of {PHASE_ROLES}")
 
 
 def decode_tables(cfg: ModelConfig, chip, decode_shape: ShapeConfig,
@@ -70,13 +80,23 @@ class Fleet:
                  router: Union[str, BaseRouter] = "round-robin",
                  governor: Optional[FleetGovernor] = None,
                  autopark_idle_s: Optional[float] = None,
-                 tick_interval_s: Optional[float] = None):
+                 tick_interval_s: Optional[float] = None,
+                 transfer_cost: Optional[TransferCostModel] = None,
+                 kv_token_bytes: int = 0):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         names = [r.name for r in replicas]
         if len(set(names)) != len(names):
             raise ValueError(f"replica names must be unique, got {names}")
         self.replicas = list(replicas)
+        roles = {r.role for r in replicas}
+        #: disaggregated when a prefill pool exists; it needs somewhere
+        #: to migrate multi-token requests to
+        self.disaggregated = PREFILL in roles
+        if self.disaggregated and roles == {PREFILL}:
+            raise ValueError("a prefill-only fleet cannot finish "
+                             "multi-token requests; add decode or "
+                             "unified replicas")
         self.router = make_router(router) if isinstance(router, str) \
             else router
         self.governor = governor
@@ -85,10 +105,28 @@ class Fleet:
         #: across runs being compared — window length shapes the
         #: loaded-power statistics)
         self.tick_interval_s = tick_interval_s
+        #: migration cost model + per-token KV payload (bytes); defaults
+        #: cover direct Fleet construction — build_fleet derives the
+        #: payload analytically from the model config
+        self.transfer_cost = transfer_cost or TransferCostModel()
+        self.kv_token_bytes = int(kv_token_bytes)
         self.power_series: List[Dict] = []
+        self.migrations: List[Dict] = []
+        self._pending: List[RequestState] = []
         self._snap_energy: Dict[str, float] = {}
         self._snap_busy: Dict[str, float] = {}
         self._snap_t = 0.0
+
+    # -- two-stage dispatch pools ----------------------------------------
+    @property
+    def admit_pool(self) -> List[Replica]:
+        """Stage 1 (arrivals): everything that can run a prefill."""
+        return [r for r in self.replicas if r.role != DECODE]
+
+    @property
+    def decode_dispatch_pool(self) -> List[Replica]:
+        """Stage 2 (migrations): everything that can continue a decode."""
+        return [r for r in self.replicas if r.role != PREFILL]
 
     # -- clock helpers ----------------------------------------------------
     def _advance_all(self, t: float) -> None:
@@ -127,9 +165,52 @@ class Fleet:
                                   measured_w=win["power_w"],
                                   util=win["util"])
 
+    # -- migration (disaggregated prefill -> decode) -----------------------
+    def _drain_outboxes(self) -> None:
+        """Turn every prefill replica's finished-prefill outbox into an
+        in-flight page-block transfer: charge the modeled cost record and
+        schedule the delivery at prefill-finish + transfer time."""
+        for r in self.replicas:
+            while r.outbox:
+                rs = r.outbox.pop(0)
+                cost = self.transfer_cost.cost(
+                    self.kv_token_bytes * rs.page_tokens)
+                self.migrations.append(cost)
+                rs.migrate_ready_s = rs.first_token_s + cost["time_s"]
+                self._pending.append(rs)
+
+    def _deliver_due(self, now: float) -> None:
+        """Stage-2 dispatch: route every landed transfer into the decode
+        pool.  Deliveries are ordered by (ready time, uid) so replay of
+        the same trace is bit-identical."""
+        due = [rs for rs in self._pending
+               if rs.migrate_ready_s <= now + 1e-12]
+        if not due:
+            return
+        self._pending = [rs for rs in self._pending
+                         if rs.migrate_ready_s > now + 1e-12]
+        due.sort(key=lambda rs: (rs.migrate_ready_s, rs.req.uid))
+        pool = self.decode_dispatch_pool
+        for rs in due:
+            rep = self.router.route(rs.req, pool)
+            rep.enqueue(rs)
+
+    def _next_migration_s(self) -> float:
+        return min((rs.migrate_ready_s for rs in self._pending),
+                   default=float("inf"))
+
     # -- serving ----------------------------------------------------------
     def serve(self, trace: Trace) -> Dict:
-        """Replay the trace; returns the fleet accounting report."""
+        """Replay the trace; returns the fleet accounting report.
+
+        Disaggregated fleets run two-stage dispatch: arrivals route over
+        the prefill(+unified) pool; a finished prefill's KV pages migrate
+        (modeled time + energy charged to the books) and the landed
+        transfer routes over the decode(+unified) pool, where admission
+        continues the decode without re-billing the prefill.  Decode-pool
+        backpressure is the replica's own admission queue + page pool: a
+        migrated request that finds no slot/pages waits exactly like any
+        queued request."""
         interval = self.governor.interval_s if self.governor is not None \
             else (self.tick_interval_s
                   or max(trace.duration_s / 16.0, 1e-3))
@@ -140,11 +221,20 @@ class Fleet:
             self.governor.control(self.replicas, now_s=0.0)
         next_tick = interval
         i = 0
-        while i < len(states) or any(r.has_work() for r in self.replicas):
+        while i < len(states) or self._pending \
+                or any(r.has_work() or r.outbox for r in self.replicas):
             t_arr = states[i].req.arrival_s if i < len(states) \
                 else float("inf")
+            t_mig = self._next_migration_s()
+            if t_mig <= min(t_arr, next_tick):
+                self._advance_all(t_mig)
+                self._drain_outboxes()
+                self._deliver_due(t_mig)
+                continue
             if next_tick <= t_arr:
                 self._advance_all(next_tick)
+                self._drain_outboxes()
+                self._deliver_due(next_tick)
                 self._tick(next_tick)
                 next_tick += interval
                 continue
@@ -152,8 +242,9 @@ class Fleet:
             # exhausted — so this branch only handles real arrivals (the
             # post-trace drain always goes through the tick branch above)
             self._advance_all(t_arr)
+            self._drain_outboxes()
             rs = states[i]
-            rep = self.router.route(rs.req, self.replicas)
+            rep = self.router.route(rs.req, self.admit_pool)
             rep.enqueue(rs)
             i += 1
         horizon = max(max((rs.finish_s or 0.0) for rs in states),
@@ -164,8 +255,10 @@ class Fleet:
             self.replicas, states, horizon,
             power_series=self.power_series,
             cap_w=self.governor.power_cap_w if self.governor is not None
-            else None)
+            else None,
+            migrations=self.migrations)
         report["router"] = self.router.name
+        report["disaggregated"] = self.disaggregated
         if self.governor is not None:
             report["fleet_governor"] = self.governor.summary()
         return report
@@ -195,6 +288,10 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
                   prefill_table: Optional[MeasurementTable] = None
                   ) -> Replica:
     """One replica from a template plan + shared decode tables."""
+    if spec.role == PREFILL:
+        # a prefill-only plan has no decode segments to re-plan; give the
+        # online governor no tables so nothing can ask it to
+        tables = {}
     gov_kwargs = {"tables": tables} if spec.governor == "online" else {}
     gov = make_governor(spec.governor, **gov_kwargs)
     sess = DvfsSession(chip=spec.chip, tau=spec.tau, governor=gov)
@@ -213,7 +310,9 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                 transfer_from: Optional[str] = None,
                 seed: int = 0, n_reps: int = 5,
                 fleet_governor: Optional[FleetGovernor] = None,
-                tick_interval_s: Optional[float] = None) -> Fleet:
+                tick_interval_s: Optional[float] = None,
+                transfer_cost: Optional[TransferCostModel] = None,
+                kv_dtype: str = "none") -> Fleet:
     """Plan once per distinct spec, instantiate one replica per entry.
 
     With ``transfer_from`` (a chip name appearing in ``specs``), every
@@ -222,6 +321,16 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
     is still measured, for repair and metering) — the
     heterogeneous-fleet deployment story: one plan search, every chip
     model of the fleet.
+
+    Phase-specialized specs (``role="prefill"``/``"decode"``) share the
+    planning run with their unified sibling spec — the base plan is
+    campaigned once per (chip, slots, tau, governor), then specialized
+    via :func:`~repro.dvfs.plan_ir.derive_role_plan` (prefill roles keep
+    only the compute-tilted prefill segment) — and the fleet runs
+    two-stage dispatch with a modeled
+    :class:`~repro.fleet.metering.TransferCostModel` charging each KV
+    page-block migration (payload derived analytically from ``cfg`` at
+    ``kv_dtype`` storage width) into the books.
     """
     from ..parallel.plan_transfer import transfer_serve_plan
 
@@ -229,7 +338,9 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
     tables: Dict[ReplicaSpec, Dict[int, MeasurementTable]] = {}
     pre_tables: Dict[ReplicaSpec, MeasurementTable] = {}
     src_plan: Optional[DvfsPlan] = None
-    ordered = list(specs)
+    # roles share one campaign: plan the unified base per distinct
+    # (chip, slots, tau, governor), specialize per spec afterwards
+    ordered = [dataclasses.replace(s, role="unified") for s in specs]
     if transfer_from is not None:
         if not any(s.chip == transfer_from for s in ordered):
             raise ValueError(f"transfer_from={transfer_from!r} does not "
@@ -259,22 +370,30 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                 src_plan = plan
         plans[spec] = plan
         tables[spec] = tabs
-    replicas = [build_replica(f"r{i}-{spec.chip}", spec, plans[spec],
-                              tables[spec],
-                              wake_latency_s=wake_latency_s,
-                              prefill_table=pre_tables[spec])
-                for i, spec in enumerate(specs)]
+    replicas = []
+    for i, spec in enumerate(specs):
+        base = dataclasses.replace(spec, role="unified")
+        plan = derive_role_plan(plans[base], spec.role)
+        suffix = "" if spec.role == "unified" else f"-{spec.role[:3]}"
+        replicas.append(build_replica(
+            f"r{i}-{spec.chip}{suffix}", spec, plan, tables[base],
+            wake_latency_s=wake_latency_s,
+            prefill_table=pre_tables[base]))
     gov = fleet_governor
     if gov is None and power_cap_w is not None:
         gov = FleetGovernor(power_cap_w, interval_s=cap_interval_s)
     return Fleet(replicas, router=router, governor=gov,
                  autopark_idle_s=autopark_idle_s,
-                 tick_interval_s=tick_interval_s)
+                 tick_interval_s=tick_interval_s,
+                 transfer_cost=transfer_cost,
+                 kv_token_bytes=kv_bytes_per_token(cfg, kv_dtype))
 
 
 def parse_replica_specs(text: str) -> List[ReplicaSpec]:
-    """CLI grammar: ``chip[:slots[:tau]][,chip...]`` or ``Nxchip[...]``,
-    e.g. ``2xtpu-v5e:4,a4000:4`` -> two tpu-v5e replicas + one a4000."""
+    """CLI grammar: ``chip[:slots[:tau]][@role][,chip...]`` or
+    ``Nxchip[...]``, e.g. ``2xtpu-v5e:4,a4000:4`` -> two tpu-v5e
+    replicas + one a4000; ``tpu-v5e@prefill,2xtpu-v5e@decode`` -> a
+    disaggregated 1-prefill/2-decode pool."""
     specs: List[ReplicaSpec] = []
     for part in text.split(","):
         part = part.strip()
@@ -284,11 +403,15 @@ def parse_replica_specs(text: str) -> List[ReplicaSpec]:
         if "x" in part and part.split("x", 1)[0].isdigit():
             head, part = part.split("x", 1)
             count = int(head)
+        role = "unified"
+        if "@" in part:
+            part, role = part.rsplit("@", 1)
         bits = part.split(":")
         spec = ReplicaSpec(
             chip=bits[0],
             n_slots=int(bits[1]) if len(bits) > 1 else 4,
-            tau=float(bits[2]) if len(bits) > 2 else 0.005)
+            tau=float(bits[2]) if len(bits) > 2 else 0.005,
+            role=role)
         specs.extend([spec] * count)
     if not specs:
         raise ValueError(f"no replica specs parsed from {text!r}")

@@ -160,18 +160,26 @@ class FleetGovernor:
                 return points
         gov = self._require_online(r)
         tables = gov.decode_tables(refresh=False)
-        if not tables:
+        if not tables and buckets:
             raise RuntimeError(f"replica {r.name!r} has no decode tables "
                                f"to build a power frontier from")
+        if not tables and not r.plan.decode_buckets:
+            # prefill-role replica: the frontier is the prefill lever
+            # alone — a different (compute-tilted, much steeper) curve
+            # than its decode siblings, arbitrated by the same shared λ
+            buckets = {}
+            n_pre = n_pre or 1.0
         mix = gov.observed_mix() or gov._ref_mix \
             or {b: 1.0 for b in tables}
         base_tau = r.session.policy.tau
         points: List[FrontierPoint] = []
         for dt in self.tau_sweep:
             tau = base_tau + dt
-            segs = plan_decode_joint(tables, mix, r.chip,
-                                     WastePolicy(tau))
-            by_bucket = {s.bucket: s for s in segs}
+            by_bucket = {}
+            if tables:
+                segs = plan_decode_joint(tables, mix, r.chip,
+                                         WastePolicy(tau))
+                by_bucket = {s.bucket: s for s in segs}
             t_pre, e_pre = self._prefill_at(r, tau)
             t = n_pre * t_pre
             e = n_pre * e_pre
@@ -266,11 +274,12 @@ class FleetGovernor:
         swap-with-carry), prefill re-compiled at the same tau."""
         gov = self._require_online(r)
         gov.policy = WastePolicy(pt.tau)
-        mix = gov.observed_mix() or gov._ref_mix \
-            or {b: 1.0 for b in r.plan.decode_buckets}
-        gov.replan(mix, reasons=[
-            f"fleet-power-cap:{self.power_cap_w:.0f}W:"
-            f"tau={pt.tau:.4f}:lambda={lam:.2e}"], refresh=False)
+        if r.plan.decode_buckets:
+            mix = gov.observed_mix() or gov._ref_mix \
+                or {b: 1.0 for b in r.plan.decode_buckets}
+            gov.replan(mix, reasons=[
+                f"fleet-power-cap:{self.power_cap_w:.0f}W:"
+                f"tau={pt.tau:.4f}:lambda={lam:.2e}"], refresh=False)
         if r.prefill_table is not None:
             seg = r.plan.prefill_segment()
             pp = compile_phase(r.prefill_table, seg.name, r.chip,

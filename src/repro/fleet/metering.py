@@ -13,6 +13,7 @@ loaded windows for tracking tightness.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -26,6 +27,49 @@ from .replica import Replica, RequestState
 #: Shared by Fleet._window (labeling) and FleetGovernor.control (bias
 #: feedback) so the two layers can never disagree on what "loaded" is.
 LOADED_UTIL_MIN = 0.8
+
+
+def kv_bytes_per_token(cfg, kv_dtype: str = "none",
+                       dtype_bytes: int = 2) -> int:
+    """Analytic bytes of cached KV state one token position adds — the
+    per-token payload a :class:`PageBlockTransfer` moves.  Attention
+    layers contribute ``2 * n_kv_heads * head_dim`` elements each at the
+    pool's storage width (quantized pools also ship their per-(page,
+    KV-head) float32 scales, amortized per token); attention-free configs
+    (pure SSM) still ship their constant-size recurrent state, modeled
+    here as one d_model vector per layer per request amortized over a
+    nominal prompt."""
+    from ..serve.kv_pages import kv_dtype_bytes
+    width = kv_dtype_bytes(kv_dtype, dtype_bytes)
+    if cfg.n_kv_heads:
+        per = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+        nbytes = per * width
+        if width != dtype_bytes:                    # quantized: + scales
+            # 4B per (page, KV-head) scale over a 16-token page
+            nbytes += cfg.n_layers * 2 * cfg.n_kv_heads * 4 // 16
+        return int(nbytes)
+    return int(cfg.n_layers * cfg.d_model * dtype_bytes)
+
+
+@dataclass(frozen=True)
+class TransferCostModel:
+    """Modeled cost of migrating a KV page block between replicas.
+
+    ``time = latency_s + bytes / bandwidth``, ``energy = link_w * time``
+    — a flat-latency + line-rate interconnect model (NVLink/ICI-class
+    defaults).  The fleet loop charges both to the migration books, so
+    the disaggregation benchmark's J/token includes what migration
+    costs, not just what phase-specialized plans save.
+    """
+
+    bandwidth_gbs: float = 50.0     # effective inter-replica GB/s
+    latency_s: float = 20e-6        # per-transfer setup latency
+    link_w: float = 15.0            # link + controller power while moving
+
+    def cost(self, nbytes: int) -> Dict[str, float]:
+        t = self.latency_s + nbytes / (self.bandwidth_gbs * 1e9)
+        return {"bytes": int(nbytes), "time_s": t,
+                "energy_j": self.link_w * t}
 
 
 def _pcts(vals: Sequence[float], ps=(50, 99)) -> Dict[str, float]:
@@ -71,14 +115,29 @@ def power_stats(series: Sequence[Dict],
     return out
 
 
+def migration_stats(migrations: Sequence[Dict]) -> Dict:
+    """Aggregate the per-transfer cost records the fleet loop charged."""
+    return {"n_migrations": len(migrations),
+            "migration_bytes": int(sum(m["bytes"] for m in migrations)),
+            "migration_s": float(sum(m["time_s"] for m in migrations)),
+            "migration_energy_j": float(sum(m["energy_j"]
+                                            for m in migrations))}
+
+
 def fleet_report(replicas: Sequence[Replica],
                  requests: Sequence[RequestState],
                  horizon_s: float,
                  power_series: Optional[List[Dict]] = None,
-                 cap_w: Optional[float] = None) -> Dict:
-    """The fleet run's single accounting artifact."""
+                 cap_w: Optional[float] = None,
+                 migrations: Optional[Sequence[Dict]] = None) -> Dict:
+    """The fleet run's single accounting artifact.  ``migrations`` (the
+    disaggregated fleet's per-transfer cost records) are charged into the
+    cluster energy total — and therefore joules/token — so the
+    disaggregation claim pays for what it moves."""
     books = [r.energy_book() for r in replicas]
     energy = sum(b["energy_j"] for b in books)
+    mig = migration_stats(migrations or [])
+    energy += mig["migration_energy_j"]
     busy_energy = sum(b["busy_energy_j"] for b in books)
     base_busy = sum(b["base_busy_energy_j"] for b in books)
     tokens = sum(b["tokens"] for b in books)
@@ -88,6 +147,7 @@ def fleet_report(replicas: Sequence[Replica],
         "horizon_s": horizon_s,
         "makespan_s": max(finishes) if finishes else horizon_s,
         "energy_j": energy,
+        **mig,
         "busy_energy_j": busy_energy,
         "idle_energy_j": sum(b["idle_energy_j"] for b in books),
         "parked_energy_j": sum(b["parked_energy_j"] for b in books),

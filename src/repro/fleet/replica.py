@@ -31,12 +31,21 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from ..dvfs.session import DvfsSession
+from ..serve.kv_pages import PagePool
 from ..serve.scheduler import Scheduler
 from .traces import TraceRequest
 
 ACTIVE = "active"
 DRAINING = "draining"
 PARKED = "parked"
+
+#: phase roles (mirrors dvfs.plan_ir.PHASE_ROLES): a unified replica
+#: serves both phases; a prefill replica migrates every multi-token
+#: request out after its first token; a decode replica admits migrated
+#: requests without re-running (or re-billing) their prefill.
+UNIFIED = "unified"
+PREFILL = "prefill"
+DECODE = "decode"
 
 
 @dataclass
@@ -50,10 +59,26 @@ class RequestState:
     finish_s: Optional[float] = None
     n_generated: int = 0
     remaining: int = 0
+    prefilled_on: Optional[str] = None     # disagg: replica that prefilled
+    migrate_ready_s: Optional[float] = None  # disagg: transfer landed
 
     @property
     def done(self) -> bool:
         return self.finish_s is not None
+
+    @property
+    def migrated(self) -> bool:
+        """True once the request's prefill ran on a *different* replica
+        (its KV pages arrive by transfer; admission must not re-prefill)."""
+        return self.first_token_s is not None and self.finish_s is None
+
+    @property
+    def page_tokens(self) -> int:
+        """Token positions the request reserves in a page pool — the same
+        whole-request reservation the real engine makes at admission
+        (prompt + every generated token except the last, which is never
+        cached)."""
+        return self.req.prompt_len + self.req.max_new_tokens - 1
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -84,7 +109,10 @@ class Replica:
     def __init__(self, name: str, session: DvfsSession, *,
                  n_slots: Optional[int] = None,
                  wake_latency_s: float = 0.0,
-                 prefill_table=None):
+                 prefill_table=None,
+                 page_size: int = 16,
+                 pool_max_seq: int = 512,
+                 n_pages: Optional[int] = None):
         plan = session.governor.plan
         if plan is None or plan.kind != "serve":
             raise ValueError(f"replica {name!r} needs a session holding "
@@ -98,6 +126,19 @@ class Replica:
         self.executor = session.serve_executor()
         self.scheduler = Scheduler(n_slots)
         self.n_slots = n_slots
+        #: phase role, stamped into the plan by derive_role_plan
+        self.role = str(plan.meta.get("role", UNIFIED))
+        #: host-side page accounting twin of the engine's PagePool —
+        #: admission reserves the same whole-request page count the real
+        #: engine would, so slot *and* page backpressure (and the
+        #: conservation invariants the disagg tests assert) are modeled.
+        #: Default geometry matches PagedBatchState: every slot can hold
+        #: pool_max_seq tokens, so a same-sized unified fleet never
+        #: back-pressures and legacy behavior is unchanged.
+        max_blocks = max(-(-pool_max_seq // page_size), 1)
+        if n_pages is None:
+            n_pages = n_slots * max_blocks + 1
+        self.pool = PagePool(n_pages, page_size, n_slots, max_blocks)
         self.wake_latency_s = wake_latency_s
         self.state = ACTIVE
         self.clock = 0.0
@@ -107,6 +148,11 @@ class Replica:
         self.n_wakes = 0
         self.last_work_s = 0.0         # clock when work was last present
         self.completed: List[RequestState] = []
+        #: disagg: multi-token prefills finished here, awaiting migration
+        #: (the fleet loop drains this into PageBlockTransfer deliveries)
+        self.outbox: List[RequestState] = []
+        self.n_migrated_out = 0
+        self.n_migrated_in = 0
         self.engine = None             # optional real ServeEngine twin
         #: prefill measurement table (fleet governor's second cap lever)
         self.prefill_table = prefill_table
@@ -122,11 +168,16 @@ class Replica:
         return self.session.governor
 
     def decode_step_time(self, n_active: int) -> float:
+        if not self.plan.decode_buckets:
+            # prefill-only plan: slots turn over at prefill cadence
+            return self.prefill_time_s
         return self.plan.decode_segment(max(n_active, 1)).time_s
 
     def decode_energy_per_token(self, n_active: int) -> float:
         """Planned decode energy per generated token at an occupancy:
         the marginal-energy signal the energy-aware router scores."""
+        if not self.plan.decode_buckets:
+            return 0.0   # prefill-only replica never decodes
         seg = self.plan.decode_segment(max(n_active, 1))
         return seg.energy_j / max(seg.bucket, 1)
 
@@ -172,7 +223,11 @@ class Replica:
         """
         q = self.scheduler.pending
         free = self.n_slots - self.scheduler.n_active
-        wait = q * self.prefill_time_s
+        # migrated-in requests (decode pool) skip prefill; only the
+        # queued ones still owing a prefill serialize ahead
+        q_pre = sum(1 for rs in self.scheduler.queue
+                    if rs.first_token_s is None)
+        wait = q_pre * self.prefill_time_s
         if q >= free:
             rem = sorted(rs.remaining for rs in self.scheduler.slots
                          if rs is not None)
@@ -232,28 +287,75 @@ class Replica:
 
     def _finish(self, slot: int, rs: RequestState) -> None:
         rs.finish_s = self.clock
-        self.scheduler.release(slot)
+        self._vacate(slot)
         self.completed.append(rs)
+
+    def _vacate(self, slot: int) -> None:
+        """Release a slot and return its page reservation to the pool."""
+        self.scheduler.release(slot)
+        if self.pool.n_blocks[slot]:
+            self.pool.free(slot)
+
+    def _migrate_out(self, slot: int, rs: RequestState) -> None:
+        """Disaggregation: the prefill is done and token 0 sampled; hand
+        the request to the fleet loop for a page-block transfer to the
+        decode pool.  The slot and its pages free immediately — the
+        transfer is a *copy* (exactly as ``extract_page_block`` copies
+        pages by value), so the source pool can reuse them while the
+        migrated KV is in flight."""
+        self._vacate(slot)
+        self.outbox.append(rs)
+        self.n_migrated_out += 1
 
     def _step(self) -> None:
         """One engine round in modeled time: admit + prefill every
-        admissible queued request, then one decode step over the pool."""
+        admissible queued request, then one decode step over the pool.
+
+        Mirrors the paged engine's admission: a request first reserves
+        its whole-request page count; when the pool cannot cover it the
+        admission is undone (``requeue``) and the round proceeds with
+        what fit — page backpressure, distinct from slot backpressure.
+        Migrated-in requests (``first_token_s`` already set) skip the
+        prefill charge: their KV arrived by transfer.  On a prefill-role
+        replica every multi-token request migrates out after its first
+        token instead of decoding locally.
+        """
         admitted: List[Tuple[int, RequestState]] = []
         while True:
             nxt = self.scheduler.admit_next()
             if nxt is None:
                 break
+            slot, rs = nxt
+            if not self.pool.allocate(slot, rs.page_tokens):
+                self.scheduler.requeue(slot)
+                if not int(self.pool.n_blocks.sum()):
+                    # pool fully idle and the head still does not fit —
+                    # deferring would deadlock (same guard as the engine)
+                    raise RuntimeError(
+                        f"replica {self.name!r}: request "
+                        f"{rs.req.uid!r} needs {rs.page_tokens} tokens; "
+                        f"pool holds {self.pool.n_free} free pages of "
+                        f"{self.pool.page_size} even when idle")
+                break
             admitted.append(nxt)
         for slot, rs in admitted:
+            if rs.first_token_s is not None:        # migrated-in
+                self.n_migrated_in += 1
+                if rs.remaining <= 0:
+                    self._finish(slot, rs)
+                continue
             rs.admitted_s = self.clock
             rec = self.executor.on_prefill()
             self.busy_s += rec.time_s
             self.clock += rec.time_s
             rs.first_token_s = self.clock
+            rs.prefilled_on = self.name
             rs.n_generated = 1
             rs.remaining = rs.req.max_new_tokens - 1
             if rs.remaining <= 0:
                 self._finish(slot, rs)
+            elif self.role == PREFILL:
+                self._migrate_out(slot, rs)
         n = self.scheduler.n_active
         if n:
             rec = self.executor.on_decode(n)
@@ -303,8 +405,16 @@ class Replica:
         busy = ex["totals"]
         idle_j = self.idle_s * self.idle_power_w
         parked_j = self.parked_s * self.parked_power_w
+        # a request's tokens are counted once fleet-wide: on the replica
+        # that *finished* it (migrated requests carry their token 0 from
+        # the prefill replica into the decode replica's book; the prefill
+        # replica's completed list holds only its single-token finishes)
         tokens = sum(rs.n_generated for rs in self.completed)
         return {"name": self.name, "chip": self.chip.name,
+                "role": self.role,
+                "n_migrated_out": self.n_migrated_out,
+                "n_migrated_in": self.n_migrated_in,
+                "pool": self.pool.stats(),
                 "state": self.state, "clock_s": self.clock,
                 "busy_s": self.busy_s, "idle_s": self.idle_s,
                 "parked_s": self.parked_s, "n_wakes": self.n_wakes,

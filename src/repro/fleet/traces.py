@@ -97,13 +97,23 @@ class Trace:
     def total_new_tokens(self) -> int:
         return sum(r.max_new_tokens for r in self.requests)
 
+    @property
+    def total_prompt_tokens(self) -> int:
+        return sum(r.prompt_len for r in self.requests)
+
     def summary(self) -> Dict:
         gaps = np.diff([r.arrival_s for r in self.requests]) \
             if len(self.requests) > 1 else np.array([0.0])
         news = np.array([r.max_new_tokens for r in self.requests])
+        prompts = self.total_prompt_tokens
         return {"n_requests": len(self.requests),
                 "duration_s": self.duration_s,
                 "total_new_tokens": int(news.sum()),
+                "total_prompt_tokens": int(prompts),
+                # prefill:decode token demand — the first-order signal
+                # for sizing a disaggregated fleet's phase pools
+                "prompt_to_new_ratio": (float(prompts / news.sum())
+                                        if news.sum() else 0.0),
                 "mean_rate_rps": (len(self.requests) / self.duration_s
                                   if self.duration_s > 0 else 0.0),
                 "gap_cv": (float(gaps.std() / gaps.mean())

@@ -29,8 +29,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--replicas", default="3xtpu-v5e:4",
-                    help="chip[:slots[:tau]] list, Nx prefix repeats "
-                         "(e.g. 2xtpu-v5e:4,a4000:4)")
+                    help="chip[:slots[:tau]][@role] list, Nx prefix "
+                         "repeats (e.g. 2xtpu-v5e:4,a4000:4; role "
+                         "prefill/decode builds a disaggregated fleet: "
+                         "tpu-v5e@prefill,2xtpu-v5e@decode)")
     ap.add_argument("--router", default="energy-slo",
                     help="repro.fleet router registry name")
     ap.add_argument("--slo-ttft", type=float, default=0.1,
@@ -84,6 +86,11 @@ def main():
           f"{rep['ttft_p99_s']*1e3:.0f} ms, TPOT p99 "
           f"{rep['tpot_p99_s']*1e3:.1f} ms, "
           f"{rep['n_completed']}/{args.requests} completed")
+    if rep.get("n_migrations"):
+        print(f"[fleet] disaggregated: {rep['n_migrations']} KV "
+              f"migrations, {rep['migration_bytes']/1e6:.1f} MB moved, "
+              f"{rep['migration_energy_j']:.2f} J / "
+              f"{rep['migration_s']*1e3:.1f} ms charged")
     for b in rep["replicas"]:
         print(f"[fleet]   {b['name']:16s} {b['chip']:15s} "
               f"{b['tokens']:5d} tok  busy {b['busy_s']:.2f}s "

@@ -313,7 +313,11 @@ def transfer_serve_plan(src, cfg: ModelConfig, chip: Chip, *,
                          f"models (clone the plan instead)")
     src_chip = _chip_by_model_name(src.chip_name)
     tau = float(src.meta.get("tau", 0.0))
-    n_slots = int(src.meta.get("n_slots", 0)) or max(src.decode_buckets)
+    # role-derived plans (e.g. a disaggregated prefill pool's) may carry
+    # no decode segments; their slot count rides the pinned meta
+    buckets = src.decode_buckets
+    n_slots = int(src.meta.get("n_slots", 0)) \
+        or (max(buckets) if buckets else 1)
     camp = Campaign(chip, seed=seed, n_reps=n_reps)
     tables = dict(tables or {})
 

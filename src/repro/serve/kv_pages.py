@@ -50,6 +50,7 @@ the payload (<0.5% at the default 16×64 pages) and is charged to
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -303,3 +304,135 @@ def write_prefill_pages(pool_leaf: jnp.ndarray, sub_leaf: jnp.ndarray,
                     pool_leaf.dtype, qmax)
     return (pool_leaf.at[:, flat].set(q, mode="drop"),
             scales.at[:, flat].set(new_scale, mode="drop"))
+
+
+# ---------------------------------------------------------------------------
+# KV-page migration (disaggregated prefill/decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageBlockTransfer:
+    """A finished prefill's cache state, serialized for migration.
+
+    Carries everything a *different* :class:`PagedBatchState` needs to
+    continue decoding the request: the slot's allocated pages for every
+    paged leaf (quantized storage plus per-(page, KV-head) scale rows when
+    the pool is quantized), the slot's rows of every dense leaf (SSM /
+    conv state, ring buffers, cross-attention K/V — a transfer is only
+    complete for families whose recurrent state rides along), and the
+    block-table splice metadata (page size, valid token count, total
+    token reservation).  Pages are copied by value — the source pool may
+    free and re-allocate them immediately after extraction.
+    """
+    kv_dtype: str                       # pool storage name ("none", "int8", ...)
+    page_size: int
+    n_tokens: int                       # valid cached positions (pos after prefill)
+    n_tokens_total: int                 # reservation at the target (prompt+max_new-1)
+    leaves: Dict[str, jnp.ndarray]      # paged: (L, nb, page, KV, D)
+    scales: Dict[str, jnp.ndarray]      # per paged leaf: (L, nb, KV) float32
+    dense: Dict[str, jnp.ndarray]       # per dense leaf: the slot's row (no batch axis)
+
+    @property
+    def n_blocks(self) -> int:
+        return next(iter(self.leaves.values())).shape[1] if self.leaves else 0
+
+    def nbytes(self) -> int:
+        """Payload bytes on the wire (pages + scales + dense rows) — the
+        quantity the fleet's transfer cost model charges."""
+        arrs = list(self.leaves.values()) + list(self.scales.values()) \
+            + list(self.dense.values())
+        return int(sum(a.size * jnp.dtype(a.dtype).itemsize for a in arrs))
+
+    def to_dict(self) -> Dict:
+        """Host-side (numpy) dict form; round-trips via :meth:`from_dict`."""
+        pull = lambda d: {k: np.asarray(v) for k, v in d.items()}
+        return {"kv_dtype": self.kv_dtype, "page_size": self.page_size,
+                "n_tokens": self.n_tokens,
+                "n_tokens_total": self.n_tokens_total,
+                "leaves": pull(self.leaves), "scales": pull(self.scales),
+                "dense": pull(self.dense)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PageBlockTransfer":
+        return cls(kv_dtype=d["kv_dtype"], page_size=int(d["page_size"]),
+                   n_tokens=int(d["n_tokens"]),
+                   n_tokens_total=int(d["n_tokens_total"]),
+                   leaves=dict(d["leaves"]), scales=dict(d["scales"]),
+                   dense=dict(d["dense"]))
+
+
+def _dense_keys(state: PagedBatchState) -> List[str]:
+    paged = set(state.paged_keys) | {scale_key(k) for k in state.paged_keys}
+    return [k for k in state.cache if k not in paged]
+
+
+def extract_page_block(state: PagedBatchState, slot: int, model,
+                       n_tokens: Optional[int] = None) -> PageBlockTransfer:
+    """Serialize ``slot``'s cache state out of ``state`` for migration.
+
+    Gathers the slot's *allocated* pages only (never the parking tail —
+    unallocated table entries point at page 0 and are not part of the
+    request), the matching scale rows when the pool is quantized, and the
+    slot's row of every dense leaf via ``model.cache_slot_axes()``.
+    ``n_tokens`` defaults to the slot's current ``pos`` (valid positions
+    written so far); the reservation size is read off the pool.
+    """
+    pool = state.pool
+    nb = int(pool.n_blocks[slot])
+    if nb == 0:
+        raise ValueError(f"slot {slot} holds no pages to extract")
+    ids = pool.tables[slot, :nb]
+    leaves = {k: state.cache[k][:, ids] for k in state.paged_keys}
+    scales = ({k: state.cache[scale_key(k)][:, ids]
+               for k in state.paged_keys} if state.quant else {})
+    axes = model.cache_slot_axes()
+    dense = {k: jnp.moveaxis(state.cache[k], axes[k], 0)[slot]
+             for k in _dense_keys(state)}
+    if n_tokens is None:
+        n_tokens = int(state.pos[slot])
+    return PageBlockTransfer(
+        kv_dtype=state.kv_dtype, page_size=pool.page_size,
+        n_tokens=int(n_tokens),
+        n_tokens_total=int(pool.used_tokens[slot]),
+        leaves=leaves, scales=scales, dense=dense)
+
+
+def splice_page_block(state: PagedBatchState, slot: int,
+                      transfer: PageBlockTransfer, model) -> bool:
+    """Land a migrated transfer in ``slot`` of a destination pool.
+
+    Allocates the full reservation (``n_tokens_total``) in the target's
+    :class:`PagePool` — returning False without touching device state
+    when the pool cannot cover it (backpressure; the caller re-queues the
+    migration) — then scatters the transferred pages into the freshly
+    allocated ids, writes the scale rows, splices the dense rows into the
+    slot, and refreshes the block-table mirror.  Page 0 stays parking:
+    the allocator never hands it out, so a transfer can never overwrite
+    it.  The caller still owns ``tokens`` / ``pos`` / ``remaining``.
+    """
+    pool = state.pool
+    if transfer.kv_dtype != state.kv_dtype:
+        raise ValueError(f"kv_dtype mismatch: transfer {transfer.kv_dtype!r}"
+                         f" vs pool {state.kv_dtype!r}")
+    if transfer.page_size != pool.page_size:
+        raise ValueError(f"page_size mismatch: transfer {transfer.page_size}"
+                         f" vs pool {pool.page_size}")
+    if not pool.allocate(slot, transfer.n_tokens_total):
+        return False
+    nb = transfer.n_blocks
+    ids = pool.tables[slot, :nb]
+    for k in state.paged_keys:
+        state.cache[k] = state.cache[k].at[:, ids].set(
+            transfer.leaves[k].astype(state.cache[k].dtype))
+        if state.quant:
+            sk = scale_key(k)
+            state.cache[sk] = state.cache[sk].at[:, ids].set(
+                jnp.asarray(transfer.scales[k], jnp.float32))
+    axes = model.cache_slot_axes()
+    for k in _dense_keys(state):
+        moved = jnp.moveaxis(state.cache[k], axes[k], 0)
+        moved = moved.at[slot].set(
+            jnp.asarray(transfer.dense[k], state.cache[k].dtype))
+        state.cache[k] = jnp.moveaxis(moved, 0, axes[k])
+    state.sync_tables()
+    return True

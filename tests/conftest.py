@@ -1,9 +1,16 @@
-"""Shared test fixtures.
+"""Shared test fixtures and factory helpers.
 
 NOTE: no global XLA_FLAGS here — smoke tests and benches must see the real
 single CPU device; multi-device sharding tests spawn subprocesses with
 their own --xla_force_host_platform_device_count (see test_sharding.py,
 test_elastic.py).
+
+The factory helpers below (``smoke_model``, ``make_requests``,
+``small_fleet``, ``small_trace``) are the single home of the tiny-model /
+chip / trace recipes the serve- and fleet-tier test modules previously
+each carried a private copy of; import them directly::
+
+    from conftest import FAMILY_ARCHS, make_requests, smoke_model
 """
 import os
 import sys
@@ -14,6 +21,75 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
+
+#: one representative (smallest) registry arch per model family
+FAMILY_ARCHS = {
+    "transformer": "llama3.2-1b",
+    "ssm": "mamba2-370m",
+    "hybrid": "zamba2-7b",
+    "encdec": "seamless-m4t-medium",
+}
+
+_MODELS = {}
+
+
+def smoke_model(arch):
+    """Memoized tiny float32 model per arch: (model, params, cfg).
+
+    Shared across test modules — building and initializing even the
+    smoke-sized models dominates suite runtime, so every module that
+    needs a real forward pass draws from this one cache.
+    """
+    if arch not in _MODELS:
+        import dataclasses
+
+        from repro.configs import REGISTRY, smoke_config
+        from repro.models import build_model
+        cfg = dataclasses.replace(smoke_config(REGISTRY[arch]),
+                                  compute_dtype="float32")
+        model = build_model(cfg, block_k=16)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODELS[arch] = (model, params, cfg)
+    return _MODELS[arch]
+
+
+def make_requests(cfg, n=6, seed=2, straggler=11):
+    """The canonical mixed-length request batch: three prompt lengths,
+    skewed generation budgets with one straggler, and per-family extras
+    (vision patches / audio frames) where the family needs them."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    news = [3, straggler, 2, 7, 5, 9]
+    reqs = []
+    for i in range(n):
+        plen = [5, 9, 12][i % 3]
+        ex = {}
+        if cfg.family == "vlm":
+            ex["patch_embeds"] = rng.normal(
+                size=(1, cfg.vision_prefix_len, cfg.d_model)
+            ).astype(np.float32)
+        if cfg.family == "encdec":
+            ex["frames"] = rng.normal(
+                size=(1, cfg.encoder_frontend_len, cfg.d_model)
+            ).astype(np.float32)
+        reqs.append(Request(uid=i,
+                            prompt=rng.integers(0, cfg.vocab_size, plen),
+                            max_new_tokens=news[i % len(news)], extras=ex))
+    return reqs
+
+
+def small_fleet(n=3, chip="tpu-v5e", **kw):
+    """n identical unified replicas of the fleet-tier reference arch."""
+    from repro.configs import REGISTRY
+    from repro.fleet import ReplicaSpec, build_fleet
+    return build_fleet([ReplicaSpec(chip=chip)] * n,
+                       REGISTRY["llama3.2-1b"], n_reps=3, **kw)
+
+
+def small_trace(n=40, rate=60.0, **kw):
+    from repro.fleet import generate_trace
+    return generate_trace("poisson", n_requests=n, rate_rps=rate, seed=0,
+                          **kw)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,271 @@
+"""KV page-block migration: PageBlockTransfer extract/splice invariants
+and cross-engine decode parity.
+
+The disaggregated fleet's correctness rests on one property: a request
+prefilled on engine A, serialized into a :class:`PageBlockTransfer`,
+and spliced into engine B's page pool decodes *exactly* like it never
+moved.  This module proves it layer by layer — transfer payload shapes
+and round-trips, splice backpressure and parking-page discipline, dense
+(recurrent / cross-attention) state riding along for every model
+family, copy semantics under page aliasing — and end-to-end: stepwise
+logits parity vs an unmigrated engine for four model families x
+{bf16, int8} KV pools.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAMILY_ARCHS, make_requests, smoke_model
+from repro.serve import ServeEngine
+from repro.serve.kv_pages import (PageBlockTransfer, PagedBatchState,
+                                  extract_page_block, scale_key,
+                                  splice_page_block)
+
+# dense parity is numerical identity (same values gathered through a
+# different block table); quantized parity inherits the documented
+# serve-path tolerance plus exact greedy agreement
+DENSE_TOL = 1e-5
+QUANT_TOL = 5e-2
+
+_HEAVY = [pytest.param("hybrid", marks=pytest.mark.slow),
+          pytest.param("encdec", marks=pytest.mark.slow)]
+_KV = ["none", "int8"]
+
+
+def _engine(arch, kv_dtype="none", slots=2):
+    model, params, cfg = smoke_model(FAMILY_ARCHS[arch])
+    kw = dict(batch_slots=slots, max_seq=64, paged=True, page_size=16)
+    if kv_dtype != "none":
+        kw["kv_dtype"] = kv_dtype
+    return model, params, cfg, ServeEngine(model, params, **kw)
+
+
+def _prefilled(arch, kv_dtype="none", n=2):
+    """An engine with n admitted (prefilled) requests in slots 0..n-1."""
+    model, params, cfg, eng = _engine(arch, kv_dtype)
+    reqs = make_requests(cfg, n=n)
+    eng.submit([dataclasses.replace(r, generated=[]) for r in reqs])
+    eng._admit()
+    return model, params, cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# transfer payload: shapes, accounting, round-trip
+# ---------------------------------------------------------------------------
+
+def test_extract_shapes_and_payload():
+    model, params, cfg, eng = _prefilled("transformer", "int8")
+    st = eng.state
+    nb = int(st.pool.n_blocks[0])
+    tr = extract_page_block(st, 0, model)
+    assert tr.kv_dtype == "int8" and tr.page_size == 16
+    assert tr.n_blocks == nb > 0
+    assert tr.n_tokens == int(st.pos[0])
+    assert tr.n_tokens_total == int(st.pool.used_tokens[0])
+    for k in st.paged_keys:
+        L, _, page, KV, D = st.cache[k].shape
+        assert tr.leaves[k].shape == (L, nb, page, KV, D)
+        assert tr.leaves[k].dtype == jnp.int8
+        assert tr.scales[k].shape == (L, nb, KV)
+    # payload accounting covers every leaf, scale row, and dense row
+    want = sum(a.size * jnp.dtype(a.dtype).itemsize
+               for a in (list(tr.leaves.values()) + list(tr.scales.values())
+                         + list(tr.dense.values())))
+    assert tr.nbytes() == want > 0
+
+
+def test_transfer_dict_round_trip():
+    model, params, cfg, eng = _prefilled("transformer", "int8")
+    tr = extract_page_block(eng.state, 1, model)
+    back = PageBlockTransfer.from_dict(tr.to_dict())
+    assert (back.kv_dtype, back.page_size, back.n_tokens,
+            back.n_tokens_total) \
+        == (tr.kv_dtype, tr.page_size, tr.n_tokens, tr.n_tokens_total)
+    for name in ("leaves", "scales", "dense"):
+        a, b = getattr(tr, name), getattr(back, name)
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+
+def test_extract_empty_slot_raises():
+    model, params, cfg, eng = _prefilled("transformer", n=1)
+    with pytest.raises(ValueError, match="no pages"):
+        extract_page_block(eng.state, 1, model)
+
+
+@pytest.mark.parametrize("family", ["ssm", "hybrid"] + [
+    pytest.param("encdec", marks=pytest.mark.slow)])
+def test_dense_state_rides_along(family):
+    """Recurrent (SSM/conv) and cross-attention state is not paged; the
+    transfer must carry the slot's dense rows or migration would truncate
+    the model's memory."""
+    model, params, cfg, eng = _prefilled(family)
+    tr = extract_page_block(eng.state, 0, model)
+    if family == "ssm":
+        assert not tr.leaves and not tr.scales     # no attention KV at all
+        assert {"ssm", "conv"} <= set(tr.dense)
+    elif family == "hybrid":
+        assert set(tr.leaves) == {"k", "v"}
+        assert {"ssm", "conv"} <= set(tr.dense)
+    else:                                          # encdec
+        assert set(tr.leaves) == {"k", "v"}
+        assert {"cross_k", "cross_v"} <= set(tr.dense)
+    for k, v in tr.dense.items():
+        # slot row only: the batch axis is stripped
+        assert v.ndim == eng.state.cache[k].ndim - 1
+
+
+# ---------------------------------------------------------------------------
+# splice: mismatch guards, backpressure, parking-page discipline
+# ---------------------------------------------------------------------------
+
+def test_splice_mismatch_raises():
+    model, params, cfg, eng = _prefilled("transformer", "int8")
+    tr = extract_page_block(eng.state, 0, model)
+    dense_dst = PagedBatchState(model, 2, 64, page_size=16)
+    with pytest.raises(ValueError, match="kv_dtype mismatch"):
+        splice_page_block(dense_dst, 0, tr, model)
+    wrong_page = PagedBatchState(model, 2, 64, page_size=32,
+                                 kv_dtype="int8")
+    with pytest.raises(ValueError, match="page_size mismatch"):
+        splice_page_block(wrong_page, 0, tr, model)
+
+
+def test_splice_backpressure_returns_false():
+    """A pool that cannot cover the reservation rejects the splice
+    without touching allocator or device state (the fleet re-queues)."""
+    model, params, cfg, eng = _prefilled("transformer")
+    # slot 1 is the straggler: its reservation spans 2 pages
+    tr = extract_page_block(eng.state, 1, model)
+    assert -(-tr.n_tokens_total // 16) == 2
+    # 1 usable page (page 0 is parking) < the transfer's reservation
+    tiny = PagedBatchState(model, 2, 64, page_size=16, n_pages=2)
+    free_before = tiny.pool.n_free
+    assert splice_page_block(tiny, 0, tr, model) is False
+    assert tiny.pool.n_free == free_before
+    assert int(tiny.pool.n_blocks[0]) == 0
+
+
+def test_splice_lands_pages_and_spares_parking():
+    model, params, cfg, eng = _prefilled("transformer", "int8")
+    tr = extract_page_block(eng.state, 0, model)
+    dst = PagedBatchState(model, 2, 64, page_size=16, kv_dtype="int8")
+    assert splice_page_block(dst, 1, tr, model)
+    nb = int(dst.pool.n_blocks[1])
+    assert nb == tr.n_blocks
+    ids = dst.pool.tables[1, :nb]
+    assert 0 not in set(ids.tolist())              # parking never granted
+    for k in dst.paged_keys:
+        np.testing.assert_array_equal(np.asarray(dst.cache[k][:, ids]),
+                                      np.asarray(tr.leaves[k]))
+        np.testing.assert_array_equal(
+            np.asarray(dst.cache[scale_key(k)][:, ids]),
+            np.asarray(tr.scales[k]))
+        # parking page 0 untouched (still zero-initialized)
+        assert not np.asarray(dst.cache[k][:, 0]).any()
+        assert not np.asarray(dst.cache[scale_key(k)][:, 0]).any()
+    # table mirror refreshed for the device-side gather
+    np.testing.assert_array_equal(np.asarray(dst.tables_dev),
+                                  dst.pool.tables)
+    # double-splice into the same slot is a pool-level double allocation
+    with pytest.raises(ValueError):
+        splice_page_block(dst, 1, tr, model)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end migration parity, per family x KV dtype
+# ---------------------------------------------------------------------------
+
+def _migrate_all(model, src, dst, n):
+    """Extract every admitted slot from src, round-trip the payload
+    through its host-dict form, splice into dst, and hand over the
+    decode-loop carries (tokens / pos ride the request, not the pages)."""
+    for slot in range(n):
+        tr = PageBlockTransfer.from_dict(
+            extract_page_block(src.state, slot, model).to_dict())
+        assert splice_page_block(dst.state, slot, tr, model)
+    dst.state.tokens = src.state.tokens
+    dst.state.pos = src.state.pos
+
+
+def _stepwise_parity(model, params, ref, moved, tol, steps=4):
+    """Jitted decode steps on both engines, greedy tokens fed from the
+    reference: logits within tol every step, argmax exact."""
+    step = jax.jit(lambda c, t, q, tb: model.decode_step(
+        params, c, t, q, block_tables=tb))
+    rc, mc = ref.state.cache, moved.state.cache
+    rt, rp = ref.state.tokens, ref.state.pos
+    mt, mp = moved.state.tokens, moved.state.pos
+    assert np.array_equal(np.asarray(rt), np.asarray(mt))
+    for i in range(steps):
+        lr, rc = step(rc, rt, rp, ref.state.tables_dev)
+        lm, mc = step(mc, mt, mp, moved.state.tables_dev)
+        assert float(jnp.max(jnp.abs(lr - lm))) <= tol, i
+        assert np.array_equal(np.asarray(jnp.argmax(lr, -1)),
+                              np.asarray(jnp.argmax(lm, -1))), i
+        rt = mt = jnp.argmax(lr, -1).astype(jnp.int32)
+        rp, mp = rp + 1, mp + 1
+
+
+@pytest.mark.parametrize("kv_dtype", _KV)
+@pytest.mark.parametrize("family", ["transformer", "ssm"] + _HEAVY)
+def test_migration_decode_parity(family, kv_dtype):
+    """Prefill on A -> serialize -> splice into B -> decode == unified."""
+    model, params, cfg, uni = _prefilled(family, kv_dtype)
+    _, _, _, src = _prefilled(family, kv_dtype)
+    dst = _engine(family, kv_dtype)[3]
+    _migrate_all(model, src, dst, 2)
+    tol = DENSE_TOL if kv_dtype == "none" else QUANT_TOL
+    _stepwise_parity(model, params, uni, dst, tol)
+
+
+@pytest.mark.parametrize("kv_dtype", _KV)
+def test_migration_parity_survives_page_aliasing(kv_dtype):
+    """Copy semantics under the adversarial allocator schedule: after
+    extraction the source frees its pages and a new tenant overwrites
+    them, while the destination's allocator hands the transfer *different*
+    page ids (a spacer request holds the low pages).  Parity must still
+    hold — the transfer owns its payload, and the destination reads it
+    through its own block table, never through source page ids."""
+    model, params, cfg, uni = _prefilled("transformer", kv_dtype)
+    _, _, _, src = _prefilled("transformer", kv_dtype)
+    dst = _engine("transformer", kv_dtype, slots=2)[3]
+
+    # spacer in dst slot 0 -> the migrated request lands on high page ids
+    dst.state.pool.allocate(0, 40)
+    tr = PageBlockTransfer.from_dict(
+        extract_page_block(src.state, 1, model).to_dict())
+    src_ids = src.state.pool.tables[1, :tr.n_blocks].copy()
+
+    # source vacates and a new tenant scribbles over the freed pages
+    src.state.pool.free(1)
+    src.state.pool.allocate(1, int(src.state.pool.used_tokens[0]))
+    for k in src.state.paged_keys:
+        junk = jnp.ones_like(src.state.cache[k][:, src_ids])
+        src.state.cache[k] = src.state.cache[k].at[:, src_ids].set(junk)
+
+    assert splice_page_block(dst.state, 1, tr, model)
+    dst_ids = dst.state.pool.tables[1, :tr.n_blocks]
+    assert set(dst_ids.tolist()).isdisjoint({0})   # parking page reserved
+    assert sorted(dst_ids.tolist()) != sorted(src_ids.tolist())
+    dst.state.tokens = uni.state.tokens
+    dst.state.pos = uni.state.pos
+
+    # compare only the migrated slot's logits row
+    step = jax.jit(lambda c, t, q, tb: model.decode_step(
+        params, c, t, q, block_tables=tb))
+    uc, dc = uni.state.cache, dst.state.cache
+    ut, up = uni.state.tokens, uni.state.pos
+    tol = DENSE_TOL if kv_dtype == "none" else QUANT_TOL
+    for i in range(4):
+        lu, uc = step(uc, ut, up, uni.state.tables_dev)
+        ld, dc = step(dc, ut, up, dst.state.tables_dev)
+        assert float(jnp.max(jnp.abs(lu[1] - ld[1]))) <= tol, i
+        assert int(jnp.argmax(lu[1])) == int(jnp.argmax(ld[1])), i
+        ut = jnp.argmax(lu, -1).astype(jnp.int32)
+        up = up + 1

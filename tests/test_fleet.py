@@ -5,6 +5,7 @@ import json
 import numpy as np
 import pytest
 
+from conftest import small_fleet, small_trace
 from repro.configs import REGISTRY
 from repro.core.power_model import get_chip
 from repro.dvfs import DvfsPlan, OnlineGovernor
@@ -15,15 +16,6 @@ from repro.fleet import (ARRIVALS, Fleet, FleetGovernor, ReplicaSpec,
 from repro.parallel import transfer_serve_plan
 
 CFG = REGISTRY["llama3.2-1b"]
-
-
-def small_fleet(n=3, chip="tpu-v5e", **kw):
-    return build_fleet([ReplicaSpec(chip=chip)] * n, CFG, n_reps=3, **kw)
-
-
-def small_trace(n=40, rate=60.0, **kw):
-    return generate_trace("poisson", n_requests=n, rate_rps=rate, seed=0,
-                          **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +329,8 @@ def hetero_out():
 
 @pytest.mark.slow
 def test_claim_router_beats_round_robin(router_out):
+    """Claim 11 (routing): energy-slo lands lower J/token than
+    round-robin at equal-or-better p99 TTFT."""
     out = router_out
     assert out["trace"]["n_requests"] == 200
     es = out["routers"]["energy-slo"]
@@ -350,6 +344,8 @@ def test_claim_router_beats_round_robin(router_out):
 
 @pytest.mark.slow
 def test_claim_power_cap_held_cheaply(powercap_out):
+    """Claim 11 (power cap): the shared-lambda cap tracks within 2% at
+    under 1% makespan slowdown."""
     out = powercap_out
     # (b) cap held within 2%, slowdown vs uncapped under 1%
     assert out["tracking_err_frac"] <= 0.02
@@ -360,6 +356,8 @@ def test_claim_power_cap_held_cheaply(powercap_out):
 
 @pytest.mark.slow
 def test_claim_heterogeneous_mix_saves_energy(hetero_out):
+    """Claim 11 (heterogeneity): the transferred-plan mixed fleet beats
+    the homogeneous baseline on total energy."""
     out = hetero_out
     het = out["heterogeneous_2x3080ti_1xa4000"]
     homo = out["homogeneous_3x3080ti"]

@@ -9,53 +9,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import FAMILY_ARCHS
+from conftest import make_requests as _requests
+from conftest import smoke_model as _smoke
 from repro.configs import REGISTRY, smoke_config
 from repro.models import build_model
 from repro.models.common import kv_qmax, paged_cache_write_quant
-from repro.serve import (KV_DTYPES, PagePool, Request, ServeEngine,
+from repro.serve import (KV_DTYPES, PagePool, ServeEngine,
                          kv_dtype_bytes, resolve_kv_dtype)
 from repro.serve.kv_pages import (PagedBatchState, scale_key,
                                   write_prefill_pages)
 
-FAMILY_ARCHS = {
-    "transformer": "llama3.2-1b",
-    "ssm": "mamba2-370m",
-    "hybrid": "zamba2-7b",
-    "encdec": "seamless-m4t-medium",
-}
-
 # documented parity tolerance of the quantized serve path (claims.md):
 # logits within LOGITS_TOL of the bf16 engine, greedy argmax exact
 LOGITS_TOL = 5e-2
-
-_MODELS = {}
-
-
-def _smoke(arch):
-    if arch not in _MODELS:
-        cfg = dataclasses.replace(smoke_config(REGISTRY[arch]),
-                                  compute_dtype="float32")
-        model = build_model(cfg, block_k=16)
-        params = model.init(jax.random.PRNGKey(0))
-        _MODELS[arch] = (model, params, cfg)
-    return _MODELS[arch]
-
-
-def _requests(cfg, n=6, seed=2):
-    rng = np.random.default_rng(seed)
-    news = [3, 11, 2, 7, 5, 9]
-    reqs = []
-    for i in range(n):
-        plen = [5, 9, 12][i % 3]
-        ex = {}
-        if cfg.family == "encdec":
-            ex["frames"] = rng.normal(
-                size=(1, cfg.encoder_frontend_len, cfg.d_model)
-            ).astype(np.float32)
-        reqs.append(Request(uid=i,
-                            prompt=rng.integers(0, cfg.vocab_size, plen),
-                            max_new_tokens=news[i % len(news)], extras=ex))
-    return reqs
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,12 @@ Checks all ``docs/*.md`` files:
 * fenced ``json`` blocks that carry a ``schema_version`` key — validated
   as :class:`repro.dvfs.DvfsPlan` documents against the IR schema
   (``repro.dvfs.validate_plan_dict``), so the plan examples embedded in
-  the docs cannot drift from the wire format the loaders accept.
+  the docs cannot drift from the wire format the loaders accept;
+* claim-test coverage — every ``@pytest.mark.slow`` test named
+  ``test_claim_*`` in ``tests/`` must declare the claim it asserts
+  (``Claim N`` in its docstring), and row ``N`` must exist in the
+  ``docs/claims.md`` claim index (a claim gate nobody documented is a
+  number nobody can interpret when it trips).
 
 Run:  PYTHONPATH=src python tools/docs_check.py      (or: make docs-check)
 Exits non-zero listing every stale command/reference, so drifting docs
@@ -26,6 +31,7 @@ fail CI instead of rotting.
 """
 from __future__ import annotations
 
+import ast
 import glob
 import json
 import os
@@ -146,6 +152,63 @@ def check_command(cmd: str, registry, make_targets):
     return f"unrecognized command {words[0]!r} (docs-check can't verify it)"
 
 
+def _is_slow_mark(dec: ast.expr) -> bool:
+    """True for a ``pytest.mark.slow`` decorator node."""
+    return (isinstance(dec, ast.Attribute) and dec.attr == "slow"
+            and isinstance(dec.value, ast.Attribute)
+            and dec.value.attr == "mark")
+
+
+def iter_slow_claim_tests():
+    """Yield (relpath, lineno, name, docstring) for every
+    ``@pytest.mark.slow`` test function named ``test_claim_*``."""
+    for path in sorted(glob.glob(os.path.join(ROOT, "tests", "*.py"))):
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read(), filename=rel)
+            except SyntaxError as e:
+                yield rel, e.lineno or 0, "<syntax error>", None
+                continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not node.name.startswith("test_claim"):
+                continue
+            if any(_is_slow_mark(d) for d in node.decorator_list):
+                yield (rel, node.lineno, node.name,
+                       ast.get_docstring(node))
+
+
+def claim_index_rows(claims_text: str) -> set:
+    """Claim numbers present as rows of the claims.md index table."""
+    return {int(m.group(1)) for m in
+            re.finditer(r"^\|\s*(\d+)\s*\|", claims_text, re.M)}
+
+
+def check_claim_tests(claims_text: str, errors: list) -> int:
+    """Slow claim gates must map to a documented claim."""
+    rows = claim_index_rows(claims_text)
+    n = 0
+    for rel, lineno, name, doc in iter_slow_claim_tests():
+        n += 1
+        nums = [int(x) for x in
+                re.findall(r"[Cc]laim\s+(\d+)", doc or "")]
+        if not nums:
+            errors.append(
+                f"{rel}:{lineno}: slow claim test {name!r} names no "
+                f"claim — its docstring must say which docs/claims.md "
+                f"claim ('Claim N') it gates")
+            continue
+        for num in nums:
+            if num not in rows:
+                errors.append(
+                    f"{rel}:{lineno}: {name!r} asserts claim {num}, "
+                    f"which has no row in the docs/claims.md claim "
+                    f"index — document the claim or fix the number")
+    return n
+
+
 def main() -> int:
     docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
     if not docs:
@@ -192,7 +255,7 @@ def main() -> int:
     # registry coverage: every registered benchmark needs a mention in
     # the claims map (any textual occurrence of its name counts)
     claims_path = os.path.join(ROOT, "docs", "claims.md")
-    n_covered = 0
+    n_covered = n_claim_tests = 0
     if os.path.exists(claims_path):
         with open(claims_path) as f:
             claims_text = f.read()
@@ -204,6 +267,7 @@ def main() -> int:
                     f"docs/claims.md: benchmark {name!r} is registered "
                     f"in benchmarks/run.py but never mentioned — map it "
                     f"to a claim (or a supporting-sweep note)")
+        n_claim_tests = check_claim_tests(claims_text, errors)
     else:
         errors.append("docs/claims.md missing: the benchmark registry "
                       "has no claims map to be checked against")
@@ -214,7 +278,8 @@ def main() -> int:
         return 1
     print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
           f"{n_refs} artifact refs, {n_plans} embedded plan(s), "
-          f"{n_covered} registered benchmarks covered by claims.md")
+          f"{n_covered} registered benchmarks covered by claims.md, "
+          f"{n_claim_tests} slow claim gates mapped")
     return 0
 
 
