@@ -54,6 +54,22 @@ class MeasurementTable:
             pairs=self.pairs, time=self.time[mask],
             energy=self.energy[mask], auto_idx=self.auto_idx)
 
+    def subset_pairs(self, idx: Sequence[int]) -> "MeasurementTable":
+        """Column counterpart of :meth:`subset`: restrict the clock-pair
+        vocabulary to ``idx`` (e.g. a thermal cap clamping the grid).
+        The AUTO pair must survive — every planner budget is anchored on
+        ``auto_idx``."""
+        idx = [int(i) for i in idx]
+        if self.auto_idx not in idx:
+            raise ValueError("subset_pairs must keep the AUTO pair "
+                             "(planner budgets anchor on auto_idx)")
+        return MeasurementTable(
+            chip_name=self.chip_name, kernels=list(self.kernels),
+            pairs=[self.pairs[i] for i in idx],
+            time=self.time[:, idx].copy(),
+            energy=self.energy[:, idx].copy(),
+            auto_idx=idx.index(self.auto_idx))
+
 
 @dataclass
 class NoiseModel:

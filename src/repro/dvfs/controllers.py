@@ -75,17 +75,26 @@ class RateLimitedController:
     """
 
     def __init__(self, chip: Chip, min_interval_s: float = 0.0,
-                 quantize: bool = True):
+                 quantize: bool = True, retry_backoff_s: float = 1e-3,
+                 max_retries: int = 4):
         self.chip = chip
         self.min_interval_s = float(min_interval_s)
         self.quantize = quantize
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.max_retries = int(max_retries)
         self.current = ClockPair(AUTO, AUTO)
         self.n_switches = 0
         self.n_throttled = 0
         self.n_quantized = 0
+        self.n_failed = 0
+        self.n_giveups = 0
+        #: structured log of driver faults / failed set-clocks / retries
+        self.controller_events: list = []
         self.switch_time_s = 0.0
         self._t = 0.0                    # modeled time (advance())
         self._last_switch_t = -np.inf
+        self._fail_until = -np.inf       # driver-fault window (modeled t)
+        self._retry = None               # (pair, attempt, due_t) or None
 
     @property
     def switch_latency_s(self) -> float:
@@ -100,27 +109,88 @@ class RateLimitedController:
             self.n_quantized += 1
         return snapped
 
-    def set_clocks(self, pair: ClockPair) -> None:
-        g = self.chip.grid
-        pair = ClockPair(self._snap(pair.mem, g.mem_clocks_mhz),
-                         self._snap(pair.core, g.core_clocks_mhz))
-        if pair == self.current:
-            return
-        if self._t - self._last_switch_t < self.min_interval_s:
-            self.n_throttled += 1        # driver refuses: clocks stay put
-            return
+    def inject_failure(self, duration_s: float) -> None:
+        """Open (or extend) a driver-fault window: every ``set_clocks``
+        inside it returns an error, in modeled *busy* time (``_t`` only
+        advances with schedule-entry dwells)."""
+        until = self._t + max(float(duration_s), 0.0)
+        self._fail_until = max(self._fail_until, until)
+        self.controller_events.append(
+            {"t": self._t, "event": "driver-fault",
+             "until": float(self._fail_until)})
+
+    def _apply(self, pair: ClockPair) -> None:
         self.n_switches += 1
         self.switch_time_s += self.chip.switch_latency_s
         self._last_switch_t = self._t
         self.current = pair
 
+    def set_clocks(self, pair: ClockPair) -> None:
+        g = self.chip.grid
+        pair = ClockPair(self._snap(pair.mem, g.mem_clocks_mhz),
+                         self._snap(pair.core, g.core_clocks_mhz))
+        # a new request supersedes any pending retry (latest wins —
+        # retrying a stale target would fight the plan)
+        self._retry = None
+        if pair == self.current:
+            return
+        if self._t - self._last_switch_t < self.min_interval_s:
+            self.n_throttled += 1        # driver refuses: clocks stay put
+            return
+        if self._t < self._fail_until:
+            # driver error: clocks stay on the LAST APPLIED pair (never
+            # the requested one); schedule a capped-backoff retry
+            self.n_failed += 1
+            due = self._t + self.retry_backoff_s
+            self.controller_events.append(
+                {"t": self._t, "event": "set-freq-fail",
+                 "requested": [pair.mem, pair.core],
+                 "retry_t": float(due)})
+            self._retry = (pair, 1, due)
+            return
+        self._apply(pair)
+
+    def _pump_retry(self) -> None:
+        while self._retry is not None:
+            pair, attempt, due = self._retry
+            if self._t < due:
+                return
+            if due >= self._fail_until:
+                self._retry = None
+                self._apply(pair)
+                self.controller_events.append(
+                    {"t": self._t, "event": "set-freq-retry-ok",
+                     "applied": [pair.mem, pair.core],
+                     "attempt": attempt})
+                return
+            if attempt >= self.max_retries:
+                self._retry = None
+                self.n_giveups += 1
+                self.controller_events.append(
+                    {"t": self._t, "event": "set-freq-giveup",
+                     "requested": [pair.mem, pair.core],
+                     "attempts": attempt})
+                return
+            self.n_failed += 1
+            backoff = min(self.retry_backoff_s * 2.0 ** attempt,
+                          16.0 * self.retry_backoff_s)
+            self.controller_events.append(
+                {"t": self._t, "event": "set-freq-retry-fail",
+                 "requested": [pair.mem, pair.core],
+                 "attempt": attempt + 1,
+                 "retry_t": float(due + backoff)})
+            self._retry = (pair, attempt + 1, due + backoff)
+
     def advance(self, dt: float) -> None:
-        """Advance modeled time (called by executors with entry dwells)."""
+        """Advance modeled time (called by executors with entry dwells),
+        then land any due retry of a failed set-clocks."""
         self._t += max(float(dt), 0.0)
+        self._pump_retry()
 
     def reset(self) -> None:
         # returning the chip to the governor always succeeds (drivers let
         # you release a lock even mid-interval)
+        self._retry = None
         if self.current != ClockPair(AUTO, AUTO):
             self.n_switches += 1
             self.switch_time_s += self.chip.switch_latency_s

@@ -200,6 +200,13 @@ class GovernorExecutor:
         out = {"chip": self.chip.name, "phases": phases, "totals": tot}
         if getattr(self.controller, "n_throttled", 0):
             out["n_throttled"] = self.controller.n_throttled
+        if getattr(self.controller, "n_failed", 0):
+            out["n_failed"] = self.controller.n_failed
+        if getattr(self.controller, "n_giveups", 0):
+            out["n_giveups"] = self.controller.n_giveups
+        if getattr(self.controller, "controller_events", None):
+            out["controller_events"] = \
+                list(self.controller.controller_events)
         if self.governor.revision > 1:
             out["governor_revision"] = self.governor.revision
             out["governor_events"] = list(self.governor.events)

@@ -11,8 +11,11 @@ path) and fleet metering (joules/token, p50/p99 TTFT/TPOT).
 """
 from .traces import (ARRIVALS, Trace, TraceRequest, generate_trace,
                      register_arrivals)
-from .replica import (ACTIVE, DECODE, DRAINING, PARKED, PREFILL, UNIFIED,
-                      Replica, RequestState)
+from .faults import (FAULTS, FaultEvent, FaultInjector, FaultSchedule,
+                     apply_thermal_cap, clamp_table, generate_faults,
+                     lift_thermal_cap, register_faults)
+from .replica import (ACTIVE, DEAD, DECODE, DRAINING, PARKED, PREFILL,
+                      UNIFIED, Replica, RequestState)
 from .router import (ROUTERS, BaseRouter, EnergySloRouter,
                      LeastQueueRouter, RoundRobinRouter, register_router,
                      router)
@@ -25,7 +28,10 @@ from .cluster import (Fleet, ReplicaSpec, build_fleet, build_replica,
 
 __all__ = [
     "ARRIVALS", "Trace", "TraceRequest", "generate_trace",
-    "register_arrivals", "ACTIVE", "DRAINING", "PARKED", "PREFILL",
+    "register_arrivals", "FAULTS", "FaultEvent", "FaultInjector",
+    "FaultSchedule", "apply_thermal_cap", "clamp_table",
+    "generate_faults", "lift_thermal_cap", "register_faults",
+    "ACTIVE", "DEAD", "DRAINING", "PARKED", "PREFILL",
     "DECODE", "UNIFIED", "Replica", "RequestState", "ROUTERS",
     "BaseRouter", "RoundRobinRouter", "LeastQueueRouter",
     "EnergySloRouter", "register_router", "router", "TAU_SWEEP",

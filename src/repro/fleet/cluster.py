@@ -32,10 +32,13 @@ from ..core.workload import WorkloadBuilder, decode_slot_buckets
 from ..dvfs.governors import governor as make_governor
 from ..dvfs.plan_ir import PHASE_ROLES, DvfsPlan, derive_role_plan
 from ..dvfs.session import DvfsSession
+from .faults import (FaultInjector, FaultSchedule, apply_thermal_cap,
+                     lift_thermal_cap)
 from .governor import FleetGovernor
 from .metering import (LOADED_UTIL_MIN, TransferCostModel, fleet_report,
                        kv_bytes_per_token)
-from .replica import ACTIVE, DECODE, PREFILL, Replica, RequestState
+from .replica import (ACTIVE, DEAD, DECODE, PREFILL, Replica,
+                      RequestState)
 from .router import BaseRouter, router as make_router
 from .traces import Trace
 
@@ -82,7 +85,12 @@ class Fleet:
                  autopark_idle_s: Optional[float] = None,
                  tick_interval_s: Optional[float] = None,
                  transfer_cost: Optional[TransferCostModel] = None,
-                 kv_token_bytes: int = 0):
+                 kv_token_bytes: int = 0,
+                 faults: Optional[FaultSchedule] = None,
+                 recover: bool = True,
+                 heartbeat_timeout_s: float = 0.02,
+                 migration_max_retries: int = 3,
+                 migration_backoff_s: float = 2e-3):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         names = [r.name for r in replicas]
@@ -116,17 +124,39 @@ class Fleet:
         self._snap_energy: Dict[str, float] = {}
         self._snap_busy: Dict[str, float] = {}
         self._snap_t = 0.0
+        # fault injection + recovery (see repro.fleet.faults)
+        self.injector = FaultInjector(faults) if faults is not None \
+            else None
+        self.recover = recover
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self.migration_max_retries = int(migration_max_retries)
+        self.migration_backoff_s = float(migration_backoff_s)
+        self._by_name = {r.name: r for r in self.replicas}
+        #: dropped transfers awaiting their backoff retry
+        self._retry: List[RequestState] = []
+        #: crashed replica -> its orphans, until the heartbeat expires
+        self._orphans: Dict[str, Dict[str, List[RequestState]]] = {}
+        #: orphans abandoned because recovery is off
+        self._stranded: List[RequestState] = []
+        self.recovery = {
+            "n_crashes": 0, "n_evicted": 0, "n_redispatched": 0,
+            "n_redelivered": 0, "n_link_retries": 0,
+            "n_link_fallbacks": 0, "n_link_degraded": 0,
+            "n_thermal_caps": 0, "n_driver_faults": 0,
+            "link_retry_energy_j": 0.0}
 
     # -- two-stage dispatch pools ----------------------------------------
     @property
     def admit_pool(self) -> List[Replica]:
         """Stage 1 (arrivals): everything that can run a prefill."""
-        return [r for r in self.replicas if r.role != DECODE]
+        return [r for r in self.replicas
+                if r.role != DECODE and r.state != DEAD]
 
     @property
     def decode_dispatch_pool(self) -> List[Replica]:
         """Stage 2 (migrations): everything that can continue a decode."""
-        return [r for r in self.replicas if r.role != PREFILL]
+        return [r for r in self.replicas
+                if r.role != PREFILL and r.state != DEAD]
 
     # -- clock helpers ----------------------------------------------------
     def _advance_all(self, t: float) -> None:
@@ -166,6 +196,46 @@ class Fleet:
                                   util=win["util"])
 
     # -- migration (disaggregated prefill -> decode) -----------------------
+    def _transfer(self, rs: RequestState, start_s: float) -> None:
+        """Launch (or re-launch) one page-block transfer at ``start_s``.
+
+        On a healthy link this charges the modeled cost record and
+        schedules the delivery — byte-for-byte the legacy path.  Inside a
+        ``link-degrade`` window time and energy stretch by the window's
+        factor; inside a ``link-drop`` window the attempt burns its link
+        energy and is retried with capped exponential backoff, falling
+        back to a decode-side prefill re-run once retries are spent."""
+        cost = self.transfer_cost.cost(
+            self.kv_token_bytes * rs.page_tokens)
+        state, factor = self.injector.link_state(start_s) \
+            if self.injector is not None else ("ok", 1.0)
+        if state == "drop":
+            rs.link_attempts += 1
+            # the failed attempt still drove the link
+            self.recovery["link_retry_energy_j"] += cost["energy_j"]
+            if rs.link_attempts > self.migration_max_retries:
+                self.recovery["n_link_fallbacks"] += 1
+                rs.needs_reprefill = True
+                rs.migrate_ready_s = start_s
+                self._pending.append(rs)
+            else:
+                self.recovery["n_link_retries"] += 1
+                backoff = min(
+                    self.migration_backoff_s
+                    * 2.0 ** (rs.link_attempts - 1),
+                    8.0 * self.migration_backoff_s)
+                rs.migrate_ready_s = start_s + backoff
+                self._retry.append(rs)
+            return
+        if state == "degrade":
+            self.recovery["n_link_degraded"] += 1
+            cost = {"bytes": cost["bytes"],
+                    "time_s": cost["time_s"] * factor,
+                    "energy_j": cost["energy_j"] * factor}
+        self.migrations.append(cost)
+        rs.migrate_ready_s = start_s + cost["time_s"]
+        self._pending.append(rs)
+
     def _drain_outboxes(self) -> None:
         """Turn every prefill replica's finished-prefill outbox into an
         in-flight page-block transfer: charge the modeled cost record and
@@ -173,11 +243,19 @@ class Fleet:
         for r in self.replicas:
             while r.outbox:
                 rs = r.outbox.pop(0)
-                cost = self.transfer_cost.cost(
-                    self.kv_token_bytes * rs.page_tokens)
-                self.migrations.append(cost)
-                rs.migrate_ready_s = rs.first_token_s + cost["time_s"]
-                self._pending.append(rs)
+                self._transfer(rs, rs.first_token_s)
+
+    def _retry_due(self, now: float) -> None:
+        """Re-launch every dropped transfer whose backoff has elapsed."""
+        due = [rs for rs in self._retry
+               if rs.migrate_ready_s <= now + 1e-12]
+        if not due:
+            return
+        self._retry = [rs for rs in self._retry
+                       if rs.migrate_ready_s > now + 1e-12]
+        due.sort(key=lambda rs: (rs.migrate_ready_s, rs.req.uid))
+        for rs in due:
+            self._transfer(rs, now)
 
     def _deliver_due(self, now: float) -> None:
         """Stage-2 dispatch: route every landed transfer into the decode
@@ -191,13 +269,135 @@ class Fleet:
                          if rs.migrate_ready_s > now + 1e-12]
         due.sort(key=lambda rs: (rs.migrate_ready_s, rs.req.uid))
         pool = self.decode_dispatch_pool
+        if not pool:
+            self._raise_stalled("decode", len(due))
         for rs in due:
             rep = self.router.route(rs.req, pool)
             rep.enqueue(rs)
 
     def _next_migration_s(self) -> float:
-        return min((rs.migrate_ready_s for rs in self._pending),
-                   default=float("inf"))
+        return min(min((rs.migrate_ready_s for rs in self._pending),
+                       default=float("inf")),
+                   min((rs.migrate_ready_s for rs in self._retry),
+                       default=float("inf")))
+
+    # -- faults: injection, detection, recovery ---------------------------
+    def _raise_stalled(self, kind: str, n: int) -> None:
+        """Satellite of the fault work: the fleet must fail loudly, not
+        loop forever, when work remains but no replica can take it."""
+        dead = [r.name for r in self.replicas if r.state == DEAD]
+        raise RuntimeError(
+            f"fleet cannot make progress: every {kind}-capable replica "
+            f"is dead ({', '.join(dead) or 'none alive'}) and {n} "
+            f"request(s) still need one — they would strand forever. "
+            f"Add {kind} replicas, protect one from the fault schedule, "
+            f"or accept the loss via a no-recovery run's "
+            f"fleet_report()['n_stranded'].")
+
+    def _next_fault_s(self) -> float:
+        """Next injected fault or pending heartbeat-timeout detection."""
+        t = self.injector.next_s() if self.injector is not None \
+            else float("inf")
+        for name in self._orphans:
+            t = min(t, self._by_name[name].dead_since
+                    + self.heartbeat_timeout_s)
+        return t
+
+    def _process_faults(self, now: float) -> None:
+        """Apply every due injected fault, then run heartbeat detection
+        (a death is only *acted on* once its timeout expires)."""
+        if self.injector is not None:
+            for action, ev in self.injector.pop_due(now):
+                self._apply_fault(action, ev, now)
+        for name in sorted(self._orphans):
+            r = self._by_name[name]
+            if now + 1e-12 >= r.dead_since + self.heartbeat_timeout_s:
+                self._detect(r, self._orphans.pop(name), now)
+
+    def _apply_fault(self, action: str, ev, now: float) -> None:
+        r = self._by_name.get(ev.replica) if ev.replica else None
+        if action == "crash":
+            if r is None or r.state == DEAD:
+                return
+            self.recovery["n_crashes"] += 1
+            self._orphans[r.name] = r.fail(now)
+            if self.governor is not None:
+                self.governor.invalidate(r.name)
+        elif action == "thermal-cap":
+            if r is None or r.state == DEAD \
+                    or r.thermal_cap is not None:
+                return
+            self.recovery["n_thermal_caps"] += 1
+            apply_thermal_cap(r, float(ev.params.get("max_core_frac",
+                                                     0.6)))
+            if self.governor is not None:
+                self.governor.invalidate(r.name)
+        elif action == "thermal-lift":
+            if r is None or r.state == DEAD or r.thermal_cap is None:
+                return
+            lift_thermal_cap(r)
+            if self.governor is not None:
+                self.governor.invalidate(r.name)
+        elif action == "driver-fail":
+            if r is None or r.state == DEAD:
+                return
+            ctl = getattr(r.executor, "controller", None)
+            if ctl is not None and hasattr(ctl, "inject_failure"):
+                self.recovery["n_driver_faults"] += 1
+                ctl.inject_failure(ev.dwell_s)
+                r.events.append({"t": now, "event": "driver-fail",
+                                 "dwell_s": ev.dwell_s})
+            else:
+                r.events.append({"t": now, "event": "driver-fail-skipped",
+                                 "why": "controller cannot fail "
+                                        "(simulated backend)"})
+
+    def _detect(self, r: Replica, orphans: Dict, now: float) -> None:
+        """Heartbeat expired: evict the dead replica and re-dispatch its
+        orphans exactly once each.  Queued requests that never prefilled
+        re-route like fresh arrivals; requests whose KV still exists at a
+        live prefiller get a re-delivered transfer; everything else
+        (mid-decode slots, unsent outbox, dead prefiller) re-runs its
+        prefill on the decode side with its token budget resumed."""
+        self.recovery["n_evicted"] += 1
+        r.events.append({"t": now, "event": "evicted"})
+        if not self.recover:
+            for bucket in ("queued", "slots", "outbox"):
+                self._stranded.extend(orphans[bucket])
+            return
+        for rs in sorted(orphans["queued"],
+                         key=lambda rs: rs.req.uid):
+            if rs.first_token_s is None:
+                pool = self.admit_pool
+                if not pool:
+                    self._raise_stalled("prefill", 1)
+                self.router.route(rs.req, pool).enqueue(rs)
+                self.recovery["n_redispatched"] += 1
+                continue
+            src = self._by_name.get(rs.prefilled_on)
+            if rs.needs_reprefill or src is None or src.state == DEAD:
+                rs.needs_reprefill = True
+                rs.migrate_ready_s = now
+                self._pending.append(rs)
+                self.recovery["n_redispatched"] += 1
+            else:
+                # the prefiller survives: re-deliver a fresh transfer
+                self.recovery["n_redelivered"] += 1
+                self._transfer(rs, now)
+        for rs in sorted(orphans["slots"] + orphans["outbox"],
+                         key=lambda rs: rs.req.uid):
+            rs.needs_reprefill = True
+            rs.migrate_ready_s = now
+            self._pending.append(rs)
+            self.recovery["n_redispatched"] += 1
+
+    def _recovery_books(self) -> Dict:
+        rec = dict(self.recovery)
+        rec["n_reprefills"] = sum(r.n_recovery_prefills
+                                  for r in self.replicas)
+        rec["reprefill_energy_j"] = sum(r.recovery_prefill_j
+                                        for r in self.replicas)
+        return rec
 
     # -- serving ----------------------------------------------------------
     def serve(self, trace: Trace) -> Dict:
@@ -221,14 +421,26 @@ class Fleet:
             self.governor.control(self.replicas, now_s=0.0)
         next_tick = interval
         i = 0
-        while i < len(states) or self._pending \
+        while i < len(states) or self._pending or self._retry \
+                or self._orphans \
                 or any(r.has_work() or r.outbox for r in self.replicas):
             t_arr = states[i].req.arrival_s if i < len(states) \
                 else float("inf")
             t_mig = self._next_migration_s()
+            t_evt = self._next_fault_s()
+            if t_evt <= min(t_mig, t_arr, next_tick):
+                # faults fire before outbox drain so a crash mid-
+                # migration-prep orphans the undrained outbox items
+                self._advance_all(t_evt)
+                self._process_faults(t_evt)
+                self._drain_outboxes()
+                self._retry_due(t_evt)
+                self._deliver_due(t_evt)
+                continue
             if t_mig <= min(t_arr, next_tick):
                 self._advance_all(t_mig)
                 self._drain_outboxes()
+                self._retry_due(t_mig)
                 self._deliver_due(t_mig)
                 continue
             if next_tick <= t_arr:
@@ -244,19 +456,26 @@ class Fleet:
             self._advance_all(t_arr)
             self._drain_outboxes()
             rs = states[i]
-            rep = self.router.route(rs.req, self.admit_pool)
+            pool = self.admit_pool
+            if not pool:
+                self._raise_stalled("prefill", len(states) - i)
+            rep = self.router.route(rs.req, pool)
             rep.enqueue(rs)
             i += 1
         horizon = max(max((rs.finish_s or 0.0) for rs in states),
                       max(r.clock for r in self.replicas))
         self._advance_all(horizon)        # idle-pad to a common horizon
         self._tick(horizon)
+        n_stranded = sum(1 for rs in states if not rs.done)
         report = fleet_report(
             self.replicas, states, horizon,
             power_series=self.power_series,
             cap_w=self.governor.power_cap_w if self.governor is not None
             else None,
-            migrations=self.migrations)
+            migrations=self.migrations,
+            n_stranded=n_stranded,
+            recovery=self._recovery_books()
+            if self.injector is not None else None)
         report["router"] = self.router.name
         report["disaggregated"] = self.disaggregated
         if self.governor is not None:
@@ -285,8 +504,8 @@ def _clone_plan(plan: DvfsPlan) -> DvfsPlan:
 def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
                   tables: Dict[int, MeasurementTable], *,
                   wake_latency_s: float = 0.0,
-                  prefill_table: Optional[MeasurementTable] = None
-                  ) -> Replica:
+                  prefill_table: Optional[MeasurementTable] = None,
+                  controller: Optional[str] = None) -> Replica:
     """One replica from a template plan + shared decode tables."""
     if spec.role == PREFILL:
         # a prefill-only plan has no decode segments to re-plan; give the
@@ -294,7 +513,8 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
         tables = {}
     gov_kwargs = {"tables": tables} if spec.governor == "online" else {}
     gov = make_governor(spec.governor, **gov_kwargs)
-    sess = DvfsSession(chip=spec.chip, tau=spec.tau, governor=gov)
+    sess = DvfsSession(chip=spec.chip, tau=spec.tau, governor=gov,
+                       controller=controller)
     sess.adopt(_clone_plan(plan))
     return Replica(name, sess, n_slots=spec.n_slots,
                    wake_latency_s=wake_latency_s,
@@ -312,7 +532,11 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                 fleet_governor: Optional[FleetGovernor] = None,
                 tick_interval_s: Optional[float] = None,
                 transfer_cost: Optional[TransferCostModel] = None,
-                kv_dtype: str = "none") -> Fleet:
+                kv_dtype: str = "none",
+                controller: Optional[str] = None,
+                faults: Optional[FaultSchedule] = None,
+                recover: bool = True,
+                heartbeat_timeout_s: float = 0.02) -> Fleet:
     """Plan once per distinct spec, instantiate one replica per entry.
 
     With ``transfer_from`` (a chip name appearing in ``specs``), every
@@ -378,7 +602,8 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
         replicas.append(build_replica(
             f"r{i}-{spec.chip}{suffix}", spec, plan, tables[base],
             wake_latency_s=wake_latency_s,
-            prefill_table=pre_tables[base]))
+            prefill_table=pre_tables[base],
+            controller=controller))
     gov = fleet_governor
     if gov is None and power_cap_w is not None:
         gov = FleetGovernor(power_cap_w, interval_s=cap_interval_s)
@@ -386,7 +611,9 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                  autopark_idle_s=autopark_idle_s,
                  tick_interval_s=tick_interval_s,
                  transfer_cost=transfer_cost,
-                 kv_token_bytes=kv_bytes_per_token(cfg, kv_dtype))
+                 kv_token_bytes=kv_bytes_per_token(cfg, kv_dtype),
+                 faults=faults, recover=recover,
+                 heartbeat_timeout_s=heartbeat_timeout_s)
 
 
 def parse_replica_specs(text: str) -> List[ReplicaSpec]:

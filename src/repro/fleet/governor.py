@@ -42,7 +42,7 @@ from ..core.phase_plan import compile_phase
 from ..dvfs.governors import OnlineGovernor, plan_decode_joint
 from ..dvfs.plan_ir import PlanSegment
 from .metering import LOADED_UTIL_MIN
-from .replica import PARKED, Replica
+from .replica import DEAD, PARKED, Replica
 
 #: tau offsets (added to each replica's base policy tau) swept into the
 #: power/slowdown frontier; spacing keeps adjacent cluster-power steps
@@ -222,6 +222,8 @@ class FleetGovernor:
                        util: Dict[str, float]) -> float:
         tot = 0.0
         for r in replicas:
+            if r.state == DEAD:
+                continue                  # a dead chip draws nothing
             if r.state == PARKED:
                 tot += r.parked_power_w
                 continue
@@ -236,7 +238,7 @@ class FleetGovernor:
         """One shared-λ bisection: per-replica operating points meeting
         the cap (or the deepest feasible set if the cap is unreachable)."""
         cap_w = self.power_cap_w if cap_w is None else cap_w
-        live = [r for r in replicas if r.state != PARKED]
+        live = [r for r in replicas if r.state not in (PARKED, DEAD)]
         lo, hi = 0.0, 1e-6
         chosen = self._choose(0.0, live, util)
         p0 = self._cluster_power(chosen, replicas, util)

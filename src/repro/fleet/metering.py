@@ -129,15 +129,22 @@ def fleet_report(replicas: Sequence[Replica],
                  horizon_s: float,
                  power_series: Optional[List[Dict]] = None,
                  cap_w: Optional[float] = None,
-                 migrations: Optional[Sequence[Dict]] = None) -> Dict:
+                 migrations: Optional[Sequence[Dict]] = None,
+                 n_stranded: int = 0,
+                 recovery: Optional[Dict] = None) -> Dict:
     """The fleet run's single accounting artifact.  ``migrations`` (the
     disaggregated fleet's per-transfer cost records) are charged into the
     cluster energy total — and therefore joules/token — so the
-    disaggregation claim pays for what it moves."""
+    disaggregation claim pays for what it moves.  ``recovery`` (the
+    fault books from :class:`~repro.fleet.cluster.Fleet`) likewise
+    charges dropped-link retry energy into the total: fault tolerance
+    pays for its failed attempts too."""
     books = [r.energy_book() for r in replicas]
     energy = sum(b["energy_j"] for b in books)
     mig = migration_stats(migrations or [])
     energy += mig["migration_energy_j"]
+    if recovery is not None:
+        energy += recovery.get("link_retry_energy_j", 0.0)
     busy_energy = sum(b["busy_energy_j"] for b in books)
     base_busy = sum(b["base_busy_energy_j"] for b in books)
     tokens = sum(b["tokens"] for b in books)
@@ -160,6 +167,9 @@ def fleet_report(replicas: Sequence[Replica],
                                  if base_busy > 0 else 0.0),
         "replicas": books,
     }
+    out["n_stranded"] = int(n_stranded)
+    if recovery is not None:
+        out["recovery"] = dict(recovery)
     out.update(latency_stats(requests))
     if power_series is not None:
         out["power"] = power_stats(power_series, cap_w)

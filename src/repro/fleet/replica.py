@@ -38,6 +38,8 @@ from .traces import TraceRequest
 ACTIVE = "active"
 DRAINING = "draining"
 PARKED = "parked"
+#: crashed (fault injection): clock frozen, 0 W, never routable again
+DEAD = "dead"
 
 #: phase roles (mirrors dvfs.plan_ir.PHASE_ROLES): a unified replica
 #: serves both phases; a prefill replica migrates every multi-token
@@ -61,6 +63,12 @@ class RequestState:
     remaining: int = 0
     prefilled_on: Optional[str] = None     # disagg: replica that prefilled
     migrate_ready_s: Optional[float] = None  # disagg: transfer landed
+    #: recovery: the KV pages are gone (crash or exhausted link retries)
+    #: — the next admitting replica must re-run the prefill, but the
+    #: token budget resumes (n_generated/remaining carry over, so the
+    #: request is billed exactly once)
+    needs_reprefill: bool = False
+    link_attempts: int = 0                 # failed transfer attempts
 
     @property
     def done(self) -> bool:
@@ -147,6 +155,13 @@ class Replica:
         self.parked_s = 0.0
         self.n_wakes = 0
         self.last_work_s = 0.0         # clock when work was last present
+        self.dead_since: Optional[float] = None
+        self.dead_s = 0.0              # post-crash dwell (0 W)
+        #: thermal clamp currently applied (max_core_frac), or None
+        self.thermal_cap: Optional[float] = None
+        self._thermal_saved = None
+        self.n_recovery_prefills = 0
+        self.recovery_prefill_j = 0.0
         self.completed: List[RequestState] = []
         #: disagg: multi-token prefills finished here, awaiting migration
         #: (the fleet loop drains this into PageBlockTransfer deliveries)
@@ -265,9 +280,37 @@ class Replica:
             self.state = ACTIVE
             self.events.append({"t": self.clock, "event": "unpark"})
 
+    def fail(self, now: float) -> Dict[str, List[RequestState]]:
+        """Crash at ``now``: orphan every queued / in-flight / outbound
+        request, free all pages, freeze the clock.  Returns the orphans
+        (each request in exactly one bucket — exactly-once recovery
+        starts from this partition); the fleet re-dispatches them once
+        the heartbeat timeout detects the death."""
+        orphans: Dict[str, List[RequestState]] = {
+            "queued": [], "slots": [], "outbox": list(self.outbox)}
+        self.outbox.clear()
+        while self.scheduler.queue:
+            orphans["queued"].append(self.scheduler.queue.popleft())
+        for slot, rs in enumerate(list(self.scheduler.slots)):
+            if rs is None:
+                continue
+            self._vacate(slot)
+            # release() bills a completion; a crash eviction is not one
+            self.scheduler.n_completed -= 1
+            orphans["slots"].append(rs)
+        self.state = DEAD
+        self.dead_since = now
+        stranded = sum(len(v) for v in orphans.values())
+        self.events.append({"t": now, "event": "crash",
+                            "orphaned": stranded})
+        return orphans
+
     # -- work -------------------------------------------------------------
     def enqueue(self, rs: RequestState) -> None:
         """Accept a routed request into the admission queue."""
+        if self.state == DEAD:
+            raise RuntimeError(f"replica {self.name!r} is dead; the "
+                               f"router must not send it work")
         if self.state == PARKED:
             self.unpark()                # routed-to-parked wakes the chip
         elif self.state == DRAINING:
@@ -339,6 +382,26 @@ class Replica:
                 break
             admitted.append(nxt)
         for slot, rs in admitted:
+            if rs.needs_reprefill:
+                # recovery: the KV pages died with their replica (or the
+                # migration link gave up) — re-run the prefill here, but
+                # resume the generation budget: tokens already streamed
+                # to the user are never re-billed, and first_token_s
+                # keeps the time the user actually saw token 0
+                rec = self.executor.on_prefill()
+                self.busy_s += rec.time_s
+                self.clock += rec.time_s
+                self.n_recovery_prefills += 1
+                self.recovery_prefill_j += rec.energy_j
+                rs.needs_reprefill = False
+                if rs.first_token_s is None:
+                    rs.first_token_s = self.clock
+                    rs.n_generated = 1
+                    rs.remaining = rs.req.max_new_tokens - 1
+                rs.prefilled_on = self.name
+                if rs.remaining <= 0:
+                    self._finish(slot, rs)
+                continue
             if rs.first_token_s is not None:        # migrated-in
                 self.n_migrated_in += 1
                 if rs.remaining <= 0:
@@ -376,6 +439,12 @@ class Replica:
         """Advance the modeled clock to (at least) ``t``: execute rounds
         while work exists — the step in flight at ``t`` completes, as on
         real hardware — then dwell idle/parked up to ``t``."""
+        if self.state == DEAD:
+            # a dead chip draws no power; only the clock moves
+            if t > self.clock:
+                self.dead_s += t - self.clock
+                self.clock = t
+            return
         while self.clock < t and self.state != PARKED and self.has_work():
             self._step()
         if self.clock < t:
@@ -417,7 +486,10 @@ class Replica:
                 "pool": self.pool.stats(),
                 "state": self.state, "clock_s": self.clock,
                 "busy_s": self.busy_s, "idle_s": self.idle_s,
-                "parked_s": self.parked_s, "n_wakes": self.n_wakes,
+                "parked_s": self.parked_s, "dead_s": self.dead_s,
+                "n_wakes": self.n_wakes,
+                "n_recovery_prefills": self.n_recovery_prefills,
+                "recovery_prefill_j": self.recovery_prefill_j,
                 "busy_energy_j": busy["energy_j"],
                 "base_busy_energy_j": busy["base_energy_j"],
                 "idle_energy_j": idle_j, "parked_energy_j": parked_j,

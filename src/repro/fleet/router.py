@@ -66,6 +66,10 @@ class BaseRouter:
             # answer: wake the cheapest parked replica
             parked = [r for r in replicas if r.state == "parked"]
             if not parked:
+                dead = [r.name for r in replicas if r.state == "dead"]
+                if dead:
+                    raise RuntimeError(
+                        f"no routable replica (dead: {', '.join(dead)})")
                 raise RuntimeError("no routable replica (all draining)")
             return min(parked, key=lambda r: r.parked_power_w)
         return self.pick(req, cands)

@@ -14,14 +14,18 @@ Examples::
         --transfer-from rtx3080ti --process diurnal --rate 25
     python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
         --power-cap 340 --rate 120
+    python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
+        --faults storm --controller rate-limited --rate 120
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from ..configs import get_config
-from ..fleet import (FleetGovernor, build_fleet, generate_trace,
+from ..fleet import (FaultInjector, FaultSchedule, FleetGovernor,
+                     build_fleet, generate_faults, generate_trace,
                      parse_replica_specs, router)
 
 
@@ -50,6 +54,17 @@ def main():
     ap.add_argument("--transfer-from", default=None,
                     help="chip whose plan seeds the other chips' plans "
                          "via cross-chip transfer")
+    ap.add_argument("--faults", default=None,
+                    help="fault schedule: a registered generator name "
+                         "(e.g. storm, random) or a path to a saved "
+                         "FaultSchedule JSON")
+    ap.add_argument("--no-recover", action="store_true",
+                    help="inject faults but strand orphans instead of "
+                         "re-dispatching them (chaos baseline)")
+    ap.add_argument("--controller", default=None,
+                    help="frequency-controller backend per replica "
+                         "(e.g. rate-limited; needed for driver-fail "
+                         "fault events to bite)")
     ap.add_argument("--save-trace", default=None,
                     help="write the generated trace JSON here")
     ap.add_argument("--json", action="store_true",
@@ -69,7 +84,19 @@ def main():
     fleet = build_fleet(specs, cfg, router=rt, fleet_governor=gov,
                         autopark_idle_s=args.autopark,
                         transfer_from=args.transfer_from,
-                        seed=args.seed)
+                        seed=args.seed, controller=args.controller,
+                        recover=not args.no_recover)
+    if args.faults:
+        # schedules are built against the fleet's replica names, so the
+        # injector is attached after the replicas exist
+        if os.path.exists(args.faults):
+            sched = FaultSchedule.load(args.faults)
+        else:
+            sched = generate_faults(
+                args.faults, seed=args.seed,
+                replicas=[r.name for r in fleet.replicas],
+                duration_s=trace.duration_s)
+        fleet.injector = FaultInjector(sched)
     rep = fleet.serve(trace)
 
     if args.json:
@@ -91,6 +118,21 @@ def main():
               f"migrations, {rep['migration_bytes']/1e6:.1f} MB moved, "
               f"{rep['migration_energy_j']:.2f} J / "
               f"{rep['migration_s']*1e3:.1f} ms charged")
+    rec = rep.get("recovery")
+    if rec is not None:
+        print(f"[fleet] faults: {rec['n_crashes']} crashes "
+              f"({rec['n_evicted']} evicted), "
+              f"{rec['n_thermal_caps']} thermal caps, "
+              f"{rec['n_driver_faults']} driver faults")
+        print(f"[fleet] recovery: {rec['n_redispatched']} re-dispatched "
+              f"({rec['n_reprefills']} prefills re-run, "
+              f"{rec['reprefill_energy_j']:.2f} J), "
+              f"{rec['n_redelivered']} re-delivered, link "
+              f"{rec['n_link_retries']} retries / "
+              f"{rec['n_link_fallbacks']} fallbacks / "
+              f"{rec['n_link_degraded']} degraded "
+              f"({rec['link_retry_energy_j']:.2f} J), "
+              f"{rep['n_stranded']} stranded")
     for b in rep["replicas"]:
         print(f"[fleet]   {b['name']:16s} {b['chip']:15s} "
               f"{b['tokens']:5d} tok  busy {b['busy_s']:.2f}s "

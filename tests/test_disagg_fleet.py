@@ -272,6 +272,72 @@ def test_conservation_with_unified_overflow_pool():
 
 
 # ---------------------------------------------------------------------------
+# randomized fault schedules: exactly-once, single billing, no leaks
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fault_templates():
+    """One planning run for the randomized fault sweep; each seed
+    rebuilds fresh replicas from the template plans."""
+    fleet = _disagg_fleet()
+    specs = parse_replica_specs(DISAGG_SPECS)
+    return fleet, [(r.name, s, r.plan.to_json(),
+                    dict(r.governor.tables or {}), r.prefill_table)
+                   for r, s in zip(fleet.replicas, specs)]
+
+
+def _faulted_fleet(tmpl, **kw):
+    from repro.fleet import build_replica
+    reps = [build_replica(name, spec, DvfsPlan.from_json(pj), tabs,
+                          prefill_table=pt)
+            for name, spec, pj, tabs, pt in tmpl]
+    return Fleet(reps, router="energy-slo",
+                 kv_token_bytes=kv_bytes_per_token(CFG), **kw)
+
+
+def test_random_fault_invariants_across_seeds(fault_templates):
+    """≥20 random fault schedules (crashes, thermal caps, link faults,
+    driver windows) against the disaggregated fleet: every run must
+    complete every request exactly once (unique finishing uids), bill
+    every generated token exactly once even when prefills re-run, and
+    leave zero allocated pages on every pool — with real fault activity
+    across the sweep (not a vacuous pass)."""
+    from repro.fleet import generate_faults
+    _, tmpl = fault_templates
+    names = [t[0] for t in tmpl]
+    protect = (names[0], names[-1])        # a prefill + a decode survivor
+    trace = generate_trace("bursty", n_requests=60, rate_rps=120.0,
+                           seed=5)
+    activity = {"n_crashes": 0, "n_link_retries": 0, "n_thermal_caps": 0,
+                "n_reprefills": 0}
+    for seed in range(22):
+        sched = generate_faults("random", seed=seed, replicas=names,
+                                protect=protect,
+                                duration_s=trace.duration_s)
+        fleet = _faulted_fleet(tmpl, faults=sched)
+        rep = fleet.serve(trace)
+        assert rep["n_completed"] == 60, (seed, sched.summary())
+        assert rep["n_stranded"] == 0
+        # exactly-once completion
+        uids = [rs.req.uid for r in fleet.replicas for rs in r.completed]
+        assert sorted(uids) == sorted(q.uid for q in trace.requests), seed
+        # single billing: fleet-wide token count matches the trace even
+        # when recovery re-ran prefills
+        assert rep["tokens"] == trace.total_new_tokens, seed
+        # zero leaked pages on every surviving (and vacated-dead) pool
+        for r in fleet.replicas:
+            st = r.pool.stats()
+            assert st["allocated_pages"] == 0, (seed, r.name)
+            assert st["used_tokens"] == 0, (seed, r.name)
+        for k in activity:
+            activity[k] += rep["recovery"][k]
+    # the sweep actually exercised the machinery
+    assert activity["n_crashes"] >= 5, activity
+    assert activity["n_thermal_caps"] >= 3, activity
+    assert activity["n_reprefills"] >= 1, activity
+
+
+# ---------------------------------------------------------------------------
 # determinism: replay == rebuild == JSON round-trip
 # ---------------------------------------------------------------------------
 

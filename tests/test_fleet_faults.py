@@ -1,0 +1,422 @@
+"""Fault injection and recovery: schedule replay, thermal clamping,
+driver-failure retries, crash recovery invariants, and the fleet's
+fail-loudly contract when every routable replica is gone.
+
+The headline fault-tolerance claim (14) rides as a slow test over the
+benchmark section like the other fleet claims; the randomized
+≥20-seed invariant sweep lives in ``test_disagg_fleet.py`` next to the
+conservation suite it extends.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import small_fleet, small_trace
+from repro.configs import REGISTRY
+from repro.core.freq import AUTO, ClockPair
+from repro.core.power_model import get_chip
+from repro.dvfs.controllers import RateLimitedController, controller
+from repro.dvfs.plan_ir import DvfsPlan
+from repro.fleet import (DEAD, FaultEvent, FaultSchedule, Fleet,
+                         FleetGovernor, ReplicaSpec, build_replica,
+                         generate_faults)
+from repro.fleet.faults import (FaultInjector, apply_thermal_cap,
+                                clamp_table, lift_thermal_cap)
+
+CFG = REGISTRY["llama3.2-1b"]
+
+
+# ---------------------------------------------------------------------------
+# cheap fleet factory: plan once (module scope), rebuild replicas per test
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def templates():
+    """One planning run; each test rebuilds fresh replicas from it."""
+    fleet = small_fleet()
+    spec = ReplicaSpec(chip="tpu-v5e")
+    return [(r.name, spec, r.plan.to_json(),
+             dict(r.governor.tables or {}), r.prefill_table)
+            for r in fleet.replicas]
+
+
+def _fresh_fleet(templates, controller=None, **kw):
+    reps = [build_replica(name, spec, DvfsPlan.from_json(pj), tabs,
+                          prefill_table=pt, controller=controller)
+            for name, spec, pj, tabs, pt in templates]
+    return Fleet(reps, router="round-robin", **kw)
+
+
+def _crash(name, t):
+    return FaultSchedule(events=[FaultEvent("crash", t, replica=name)])
+
+
+# ---------------------------------------------------------------------------
+# schedules: registry, validation, bit-identical JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor", 0.1, replica="r0")
+    with pytest.raises(ValueError, match="needs a target replica"):
+        FaultEvent("crash", 0.1)
+    # link faults are replica-less windows
+    FaultEvent("link-drop", 0.1, dwell_s=0.05)
+    with pytest.raises(ValueError, match="sorted by time"):
+        FaultSchedule(events=[FaultEvent("crash", 0.2, replica="a"),
+                              FaultEvent("crash", 0.1, replica="b")])
+
+
+def test_schedule_json_round_trip_bit_identical(tmp_path):
+    sched = generate_faults("storm", seed=3,
+                            replicas=["r0", "r1", "r2"], duration_s=2.0)
+    assert len(sched) == 6
+    blob = sched.to_json()
+    assert FaultSchedule.from_json(blob).to_json() == blob
+    path = tmp_path / "storm.json"
+    sched.save(str(path))
+    assert FaultSchedule.load(str(path)).to_json() == blob
+    # the recipe is stamped for replay provenance
+    assert sched.meta["name"] == "storm" and sched.meta["seed"] == 3
+    with pytest.raises(ValueError, match="unknown fault generator"):
+        generate_faults("nope", replicas=["a"])
+
+
+def test_random_faults_respect_protection():
+    for seed in range(8):
+        sched = generate_faults("random", seed=seed,
+                                replicas=["a", "b", "c", "d"],
+                                protect=("a", "c"), max_crashes=2)
+        crashed = {e.replica for e in sched.events if e.kind == "crash"}
+        assert crashed <= {"b", "d"}
+        ts = [e.t for e in sched.events]
+        assert ts == sorted(ts)
+
+
+def test_injector_windows_and_timeline():
+    sched = FaultSchedule(events=[
+        FaultEvent("thermal-cap", 0.1, replica="r0", dwell_s=0.2,
+                   params={"max_core_frac": 0.6}),
+        FaultEvent("link-degrade", 0.15, dwell_s=0.15,
+                   params={"factor": 4.0}),
+        FaultEvent("link-drop", 0.2, dwell_s=0.05),
+    ])
+    inj = FaultInjector(sched)
+    # the thermal window expands to an apply + a lift action
+    assert inj.next_s() == 0.1
+    assert [a for a, _ in inj.pop_due(0.1)] == ["thermal-cap"]
+    assert inj.next_s() == pytest.approx(0.3)       # the lift
+    # drop beats an overlapping degrade; outside both the link is clean
+    assert inj.link_state(0.16) == ("degrade", 4.0)
+    assert inj.link_state(0.21) == ("drop", 0.0)
+    assert inj.link_state(0.26)[0] == "degrade"     # drop over, degrade on
+    assert inj.link_state(0.5) == ("ok", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# thermal clamping (DVFS graceful degradation)
+# ---------------------------------------------------------------------------
+
+def test_clamp_table_properties():
+    from repro.core.measure import Campaign
+    from repro.core.workload import WorkloadBuilder
+    from repro.configs.base import ShapeConfig
+    chip = get_chip("tpu-v5e")
+    shape = ShapeConfig(name="t", seq_len=128, global_batch=1,
+                        kind="decode")
+    table = Campaign(chip, seed=0, n_reps=1).run(
+        WorkloadBuilder(CFG, shape).build())
+    sub = clamp_table(table, 0.6)
+    top = max(p.core for p in table.pairs
+              if p.core != AUTO and p.mem != AUTO)
+    # every surviving pair is fully pinned at/below the cap — except the
+    # mandatory AUTO anchor
+    for i, p in enumerate(sub.pairs):
+        if i == sub.auto_idx:
+            assert p == ClockPair(AUTO, AUTO)
+        else:
+            assert p.mem != AUTO and p.core != AUTO
+            assert p.core <= 0.6 * top + 1e-9
+    assert len(sub.pairs) < len(table.pairs)
+    # the AUTO column is rewritten to the fastest surviving pinned pair:
+    # capped auto runs at the cap, so budgets anchor on capped reality
+    fastest = max((j for j in range(len(sub.pairs)) if j != sub.auto_idx),
+                  key=lambda j: (sub.pairs[j].core, sub.pairs[j].mem))
+    assert np.array_equal(sub.time[:, sub.auto_idx],
+                          sub.time[:, fastest])
+    assert np.array_equal(sub.energy[:, sub.auto_idx],
+                          sub.energy[:, fastest])
+    # source table untouched (siblings share it)
+    assert table.pairs[table.auto_idx] == ClockPair(AUTO, AUTO)
+    # even an absurd cap keeps the deepest core state
+    deep = clamp_table(table, 0.0)
+    assert any(p.core != AUTO for p in deep.pairs)
+    with pytest.raises(ValueError, match="must keep the AUTO pair"):
+        table.subset_pairs([0])
+
+
+def test_thermal_cap_replans_and_lifts(templates):
+    fleet = _fresh_fleet(templates)
+    r = fleet.replicas[0]
+    rev0 = r.governor.revision
+    full_pairs = {b: len(t.pairs) for b, t in r.governor.tables.items()}
+    apply_thermal_cap(r, 0.6)
+    assert r.thermal_cap == 0.6
+    # tables clamped, re-plan forced (revision bump -> meters remount)
+    assert all(len(t.pairs) < full_pairs[b]
+               for b, t in r.governor.tables.items())
+    assert r.governor.revision > rev0
+    assert any("thermal-cap" in str(e) for e in r.governor.events)
+    assert r.events[-1]["event"] == "thermal-cap"
+    # sibling replicas' tables are untouched (per-governor dicts)
+    other = fleet.replicas[1]
+    assert all(len(t.pairs) == full_pairs[b]
+               for b, t in other.governor.tables.items())
+    with pytest.raises(RuntimeError, match="already"):
+        apply_thermal_cap(r, 0.5)
+    rev1 = r.governor.revision
+    lift_thermal_cap(r)
+    assert r.thermal_cap is None
+    assert all(len(t.pairs) == full_pairs[b]
+               for b, t in r.governor.tables.items())
+    assert r.governor.revision > rev1
+    with pytest.raises(RuntimeError, match="no thermal cap"):
+        lift_thermal_cap(r)
+
+
+def test_capped_fleet_still_serves(templates):
+    sched = FaultSchedule(events=[
+        FaultEvent("thermal-cap", 0.05, replica="r0-tpu-v5e",
+                   dwell_s=0.2, params={"max_core_frac": 0.5})])
+    fleet = _fresh_fleet(templates, faults=sched)
+    rep = fleet.serve(small_trace(n=30, rate=60.0))
+    assert rep["n_completed"] == 30
+    assert rep["n_stranded"] == 0
+    assert rep["recovery"]["n_thermal_caps"] == 1
+    # the cap lifted before the end: the replica is back on the full grid
+    assert fleet.replicas[0].thermal_cap is None
+
+
+# ---------------------------------------------------------------------------
+# RateLimitedController driver faults (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _ctl(**kw):
+    return RateLimitedController(get_chip("tpu-v5e"), **kw)
+
+
+def _pinned(ctl, i=0):
+    g = ctl.chip.grid
+    return ClockPair(g.mem_clocks_mhz[0], g.core_clocks_mhz[i])
+
+
+def test_controller_fail_keeps_last_applied():
+    ctl = _ctl(retry_backoff_s=1e-3, max_retries=4)
+    p0 = _pinned(ctl, 0)
+    ctl.set_clocks(p0)
+    assert ctl.current == p0 and ctl.n_switches == 1
+    ctl.inject_failure(5e-3)
+    p1 = _pinned(ctl, 1)
+    ctl.set_clocks(p1)
+    # the error leaves accounting on the last APPLIED pair, not p1
+    assert ctl.current == p0
+    assert ctl.n_failed == 1
+    evs = [e["event"] for e in ctl.controller_events]
+    assert evs == ["driver-fault", "set-freq-fail"]
+    # retries back off inside the window, land once it closes
+    ctl.advance(10e-3)
+    assert ctl.current == p1
+    assert any(e["event"] == "set-freq-retry-ok"
+               for e in ctl.controller_events)
+
+
+def test_controller_gives_up_after_capped_backoff():
+    ctl = _ctl(retry_backoff_s=1e-3, max_retries=3)
+    ctl.inject_failure(1e6)                      # never recovers
+    ctl.set_clocks(_pinned(ctl))
+    for _ in range(10):
+        ctl.advance(1.0)
+    assert ctl.n_giveups == 1
+    assert ctl.current == ClockPair(AUTO, AUTO)  # nothing ever applied
+    # attempts = 1 initial fail + (max_retries - 1) retry fails
+    assert ctl.n_failed == 3
+    assert ctl.controller_events[-1]["event"] == "set-freq-giveup"
+    # backoff is capped: retry gaps never exceed 16x the base
+    retries = [e for e in ctl.controller_events
+               if e["event"] == "set-freq-retry-fail"]
+    assert all(e["retry_t"] <= 1.0 + 16e-3 for e in retries)
+
+
+def test_controller_new_request_supersedes_retry():
+    ctl = _ctl(retry_backoff_s=1e-3)
+    ctl.inject_failure(2e-3)
+    p1, p2 = _pinned(ctl, 1), _pinned(ctl, 2)
+    ctl.set_clocks(p1)
+    assert ctl._retry is not None
+    ctl.advance(5e-3)                            # window over...
+    assert ctl.current == p1                     # ...retry landed
+    ctl.inject_failure(2e-3)
+    ctl.set_clocks(p2)
+    ctl.set_clocks(p1)                           # latest wins: p1 == current
+    assert ctl._retry is None                    # stale p2 retry dropped
+    ctl.advance(5e-3)
+    assert ctl.current == p1
+
+
+def test_controller_registry_accepts_fault_kwargs():
+    ctl = controller("rate-limited", get_chip("tpu-v5e"),
+                     min_interval_s=1e-3, retry_backoff_s=5e-4)
+    assert isinstance(ctl, RateLimitedController)
+    assert ctl.retry_backoff_s == 5e-4
+
+
+def test_driver_fault_in_fleet_surfaces_in_summary(templates):
+    sched = FaultSchedule(events=[
+        FaultEvent("driver-fail", 0.02, replica="r1-tpu-v5e",
+                   dwell_s=0.3)])
+    fleet = _fresh_fleet(templates, controller="rate-limited",
+                         faults=sched)
+    rep = fleet.serve(small_trace(n=40, rate=100.0))
+    assert rep["n_completed"] == 40
+    assert rep["recovery"]["n_driver_faults"] == 1
+    summ = fleet.replicas[1].executor.summary()
+    assert summ.get("n_failed", 0) > 0
+    assert any(e["event"] == "set-freq-fail"
+               for e in summ["controller_events"])
+
+
+# ---------------------------------------------------------------------------
+# crash recovery (exactly-once) and fail-loudly
+# ---------------------------------------------------------------------------
+
+def test_crash_recovery_exactly_once(templates):
+    trace = small_trace(n=40, rate=80.0)
+    clean = _fresh_fleet(templates).serve(trace)
+    fleet = _fresh_fleet(templates,
+                         faults=_crash("r0-tpu-v5e", 0.25))
+    rep = fleet.serve(trace)
+    dead = fleet.replicas[0]
+    assert dead.state == DEAD
+    assert rep["n_completed"] == 40 and rep["n_stranded"] == 0
+    rec = rep["recovery"]
+    assert rec["n_crashes"] == rec["n_evicted"] == 1
+    assert rec["n_redispatched"] >= 1
+    # exactly-once: every uid finishes on exactly one replica, token
+    # billing matches the trace even though prefills re-ran
+    uids = [rs.req.uid for r in fleet.replicas for rs in r.completed]
+    assert sorted(uids) == sorted(q.uid for q in trace.requests)
+    assert rep["tokens"] == clean["tokens"] == trace.total_new_tokens
+    # recovery work is visible and charged
+    assert rec["n_reprefills"] >= 1
+    assert rec["reprefill_energy_j"] > 0
+    # the dead chip froze: no energy billed past the crash
+    book = dead.energy_book()
+    assert book["dead_s"] > 0
+    # every surviving pool drained clean; the dead pool was vacated
+    for r in fleet.replicas:
+        st = r.pool.stats()
+        assert st["allocated_pages"] == 0 and st["used_tokens"] == 0
+
+
+def test_no_recovery_strands_and_reports(templates):
+    trace = small_trace(n=40, rate=80.0)
+    fleet = _fresh_fleet(templates, faults=_crash("r0-tpu-v5e", 0.25),
+                         recover=False)
+    rep = fleet.serve(trace)
+    assert rep["n_stranded"] >= 1
+    assert rep["n_completed"] == 40 - rep["n_stranded"]
+    assert rep["recovery"]["n_redispatched"] == 0
+    # stranded uids are exactly the trace minus the completed set
+    uids = {rs.req.uid for r in fleet.replicas for rs in r.completed}
+    stranded = {q.uid for q in trace.requests} - uids
+    assert len(stranded) == rep["n_stranded"]
+
+
+def test_all_dead_raises_actionable_error(templates):
+    sched = FaultSchedule(events=[
+        FaultEvent("crash", 0.05, replica="r0-tpu-v5e"),
+        FaultEvent("crash", 0.05, replica="r1-tpu-v5e"),
+        FaultEvent("crash", 0.05, replica="r2-tpu-v5e")])
+    fleet = _fresh_fleet(templates, faults=sched)
+    with pytest.raises(RuntimeError,
+                       match="cannot make progress"):
+        fleet.serve(small_trace(n=40, rate=80.0))
+
+
+def test_dead_replica_rejects_enqueue_and_router_names_dead(templates):
+    from repro.fleet.router import RoundRobinRouter
+    from repro.fleet.replica import RequestState
+    fleet = _fresh_fleet(templates)
+    r = fleet.replicas[0]
+    r.fail(0.0)
+    with pytest.raises(RuntimeError, match="dead"):
+        r.enqueue(RequestState(req=small_trace(n=1).requests[0]))
+    with pytest.raises(RuntimeError, match="r0-tpu-v5e"):
+        RoundRobinRouter().route(small_trace(n=1).requests[0], [r])
+
+
+def test_fleet_governor_excludes_dead(templates):
+    fleet = _fresh_fleet(templates)
+    fg = FleetGovernor(power_cap_w=500.0)
+    util = {r.name: 1.0 for r in fleet.replicas}
+    sol_all = fg.solve(fleet.replicas, util, cap_w=1e6)
+    p_all = sol_all["predicted_w"]
+    fleet.replicas[0].fail(0.0)
+    fg.invalidate(fleet.replicas[0].name)
+    sol = fg.solve(fleet.replicas, util, cap_w=1e6)
+    # the dead replica is out of the solve and draws nothing
+    assert fleet.replicas[0].name not in sol["chosen"]
+    assert sol["predicted_w"] < p_all
+    assert set(sol["chosen"]) == {r.name for r in fleet.replicas[1:]}
+
+
+def test_faulted_replay_is_deterministic(templates):
+    trace = small_trace(n=40, rate=80.0)
+    sched = generate_faults("storm", seed=0,
+                            replicas=[t[0] for t in templates],
+                            duration_s=trace.duration_s)
+    blobs = []
+    for _ in range(2):
+        fleet = _fresh_fleet(templates,
+                             faults=FaultSchedule.from_json(
+                                 sched.to_json()))
+        blobs.append(json.dumps(fleet.serve(trace), sort_keys=True,
+                                default=float))
+    assert blobs[0] == blobs[1]
+
+
+# ---------------------------------------------------------------------------
+# the headline claim + its anchor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_claim_fault_storm_recovery():
+    """Claim 14: under the seeded fault storm (prefill + decode crashes,
+    thermal cap, flaky migration link, driver-fault window) the
+    recovering disaggregated fleet completes 100% of the bursty trace
+    with bounded p99 TTFT inflation and single-digit-% J/token overhead,
+    while the no-recovery baseline strands requests."""
+    from benchmarks.serve_fleet import fault_section
+    out = fault_section()
+    assert out["fault_tolerant"], out
+    assert out["completion_frac"] == 1.0
+    assert out["baseline_stranded"] >= 1
+    assert out["j_per_tok_overhead_pct"] < 10.0
+    assert out["ttft_p99_inflation_pct"] < 50.0
+    rec = out["recovering"]["recovery"]
+    assert rec["n_crashes"] == 2 and rec["n_evicted"] == 2
+    assert rec["n_link_retries"] > 0 and rec["n_reprefills"] > 0
+
+
+def test_bench_anchor_has_fault_keys():
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fleet.json")
+    with open(path) as f:
+        base = json.load(f)
+    assert base["fault_completion_frac"] == 1.0
+    assert base["fault_baseline_stranded"] >= 1
+    assert base["fault_j_per_tok"] > 0
+    assert base["fault_overhead_pct"] < 10.0
+    assert base["fault_ttft_p99_inflation_pct"] < 50.0
