@@ -24,11 +24,15 @@ bench:
 #  - train: executed kernel-level energy/time regression vs
 #    BENCH_train.json fails;
 #  - fleet: a lost fleet claim (router/cap/hetero) or a >10%
-#    joules-per-token regression vs BENCH_fleet.json fails.
+#    joules-per-token regression vs BENCH_fleet.json fails;
+#  - prefix: a lost prefix-cache claim (cache/replan/affinity) or a
+#    >10% joules-per-token regression vs the prefix_* anchors in
+#    BENCH_serve.json fails.
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.serve_continuous --smoke --check
 	PYTHONPATH=src python -m benchmarks.train_dvfs --smoke --check
 	PYTHONPATH=src python -m benchmarks.serve_fleet --smoke --check
+	PYTHONPATH=src python -m benchmarks.serve_prefix --smoke --check
 
 # Verify every command fenced in docs/*.md against the benchmark
 # registry and every [[artifact]] reference against the working tree.

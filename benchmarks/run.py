@@ -15,7 +15,8 @@ import time
 from . import (pass_level, kernel_overview, kernel_table, totals,
                relaxed_waste, validation, data_parallel, tensor_parallel,
                heterogeneity, switch_latency, dvfs_by_arch, roofline,
-               search_cost, serve_continuous, serve_fleet, train_dvfs)
+               search_cost, serve_continuous, serve_fleet,
+               serve_prefix, train_dvfs)
 
 
 def _derived(name, out):
@@ -53,6 +54,8 @@ def _derived(name, out):
             return out["energy"]["totals"]["energy_pct"]
         if name == "serve_fleet":
             return out["router"]["j_per_tok_vs_rr_pct"]
+        if name == "serve_prefix":
+            return out["replan"]["recovered_frac"]
         if name == "train_dvfs":
             return out["kernel_level"]["energy_pct"]
     except Exception:
@@ -77,6 +80,7 @@ BENCHES = [
     ("train_dvfs", train_dvfs.main),            # §5-6 executed + §7-8 xfer
     ("serve_continuous", serve_continuous.main),  # serving stack, §10-11
     ("serve_fleet", serve_fleet.main),          # fleet tier, beyond-paper
+    ("serve_prefix", serve_prefix.main),        # prefix cache, claim 15
 ]
 
 REGISTRY = dict(BENCHES)

@@ -114,15 +114,23 @@ class GovernorExecutor:
         return seg
 
     # -- execution --------------------------------------------------------
-    def execute(self, name: str) -> StepEnergy:
-        """Replay one segment's clock schedule and meter it."""
+    def execute(self, name: str, frac: float = 1.0) -> StepEnergy:
+        """Replay one segment's clock schedule and meter it.
+
+        ``frac`` scales the charged work: a prefix-cache hit prefills
+        only the uncached suffix, so the books (measured *and* baseline
+        twin — savings percentages stay comparable) bill ``frac`` of the
+        planned segment while the clock schedule replays in full.  The
+        governor still observes the planned per-execution cost — a
+        smaller workload is a mix effect, not clock drift.
+        """
         seg = self._segment(name)
         sw0 = getattr(self.controller, "n_switches", 0)
         advance = getattr(self.controller, "advance", None)
         for entry in seg.schedule.entries:
             self.controller.set_clocks(ClockPair(entry.mem, entry.core))
             if advance is not None:
-                advance(entry.expected_time_s)
+                advance(entry.expected_time_s * frac)
         self.switches[name] += getattr(self.controller, "n_switches",
                                        sw0) - sw0
         step = self._steps[name]
@@ -134,6 +142,13 @@ class GovernorExecutor:
             self.governor.observe(name, mt, me)
         else:
             self.governor.observe(name, rec.time_s, rec.energy_j)
+        if frac != 1.0:
+            for m in (self.meters[name], self.baseline[name]):
+                r = m.records[-1]
+                m.records[-1] = StepEnergy(
+                    step=r.step, time_s=r.time_s * frac,
+                    energy_j=r.energy_j * frac, n_switches=r.n_switches)
+            rec = self.meters[name].records[-1]
         return rec
 
     # -- lifecycle --------------------------------------------------------
@@ -223,9 +238,11 @@ class ServeGovernorExecutor(GovernorExecutor):
         return cls(gov, chip, controller, **kw)
 
     # -- phase hooks ------------------------------------------------------
-    def on_prefill(self) -> StepEnergy:
-        # by scope, not by name — prefill segments may be named freely
-        return self.execute(self.governor.plan.prefill_segment().name)
+    def on_prefill(self, frac: float = 1.0) -> StepEnergy:
+        # by scope, not by name — prefill segments may be named freely.
+        # ``frac`` bills a prefix-cache hit's suffix-only prefill.
+        return self.execute(self.governor.plan.prefill_segment().name,
+                            frac=frac)
 
     def on_decode(self, n_active: int) -> StepEnergy:
         # by scope+bucket, not by a "decode@<b>" name convention

@@ -135,6 +135,17 @@ class DvfsSession:
         self.planner_wall_s += time.perf_counter() - t0
         plan = DvfsPlan.from_phase_bundle(bundle)
         plan.meta.setdefault("n_slots", int(n_slots))
+        # the bundle plans each decode bucket under its own (1+tau)*T_b
+        # budget — implicitly a uniform-traffic assumption.  Record that
+        # assumption so online governors measure mix drift against what
+        # the *planner* believed (a skewed serve mix — e.g. prefix-cache
+        # hits tilting occupancy decode-ward — then fires a joint
+        # re-plan that reallocates the shared slack budget) instead of
+        # silently anchoring the reference to the first observed window.
+        if plan.decode_buckets:
+            plan.meta.setdefault("decode_mix", {
+                int(b): 1.0 / len(plan.decode_buckets)
+                for b in plan.decode_buckets})
         if role != "unified":
             plan = derive_role_plan(plan, role)
         plan.meta["governor"] = self.governor.name

@@ -9,16 +9,17 @@ power capping by the :class:`FleetGovernor` (one shared Lagrangian
 budget across replicas, pushed through each replica's online re-plan
 path) and fleet metering (joules/token, p50/p99 TTFT/TPOT).
 """
-from .traces import (ARRIVALS, Trace, TraceRequest, generate_trace,
+from .traces import (ARRIVALS, SLO_TTFT_S, Trace, TraceRequest,
+                     generate_tenant_trace, generate_trace,
                      register_arrivals)
 from .faults import (FAULTS, FaultEvent, FaultInjector, FaultSchedule,
                      apply_thermal_cap, clamp_table, generate_faults,
                      lift_thermal_cap, register_faults)
 from .replica import (ACTIVE, DEAD, DECODE, DRAINING, PARKED, PREFILL,
                       UNIFIED, Replica, RequestState)
-from .router import (ROUTERS, BaseRouter, EnergySloRouter,
-                     LeastQueueRouter, RoundRobinRouter, register_router,
-                     router)
+from .router import (ROUTERS, BaseRouter, CacheAffinityRouter,
+                     EnergySloRouter, LeastQueueRouter, RoundRobinRouter,
+                     register_router, router)
 from .governor import TAU_SWEEP, FleetGovernor, FrontierPoint
 from .metering import (TransferCostModel, fleet_report, kv_bytes_per_token,
                        latency_stats, migration_stats, power_stats)
@@ -27,14 +28,16 @@ from .cluster import (Fleet, ReplicaSpec, build_fleet, build_replica,
                       parse_replica_specs)
 
 __all__ = [
-    "ARRIVALS", "Trace", "TraceRequest", "generate_trace",
+    "ARRIVALS", "SLO_TTFT_S", "Trace", "TraceRequest",
+    "generate_tenant_trace", "generate_trace",
     "register_arrivals", "FAULTS", "FaultEvent", "FaultInjector",
     "FaultSchedule", "apply_thermal_cap", "clamp_table",
     "generate_faults", "lift_thermal_cap", "register_faults",
     "ACTIVE", "DEAD", "DRAINING", "PARKED", "PREFILL",
     "DECODE", "UNIFIED", "Replica", "RequestState", "ROUTERS",
     "BaseRouter", "RoundRobinRouter", "LeastQueueRouter",
-    "EnergySloRouter", "register_router", "router", "TAU_SWEEP",
+    "EnergySloRouter", "CacheAffinityRouter", "register_router",
+    "router", "TAU_SWEEP",
     "FleetGovernor", "FrontierPoint", "TransferCostModel", "fleet_report",
     "kv_bytes_per_token", "latency_stats", "migration_stats",
     "power_stats", "Fleet", "ReplicaSpec", "build_fleet", "build_replica",

@@ -505,7 +505,10 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
                   tables: Dict[int, MeasurementTable], *,
                   wake_latency_s: float = 0.0,
                   prefill_table: Optional[MeasurementTable] = None,
-                  controller: Optional[str] = None) -> Replica:
+                  controller: Optional[str] = None,
+                  prefix_cache: bool = False,
+                  pool_pages: Optional[int] = None,
+                  cache_seed: int = 0) -> Replica:
     """One replica from a template plan + shared decode tables."""
     if spec.role == PREFILL:
         # a prefill-only plan has no decode segments to re-plan; give the
@@ -518,7 +521,10 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
     sess.adopt(_clone_plan(plan))
     return Replica(name, sess, n_slots=spec.n_slots,
                    wake_latency_s=wake_latency_s,
-                   prefill_table=prefill_table)
+                   prefill_table=prefill_table,
+                   n_pages=pool_pages,
+                   prefix_cache=prefix_cache,
+                   cache_seed=cache_seed)
 
 
 def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
@@ -536,7 +542,9 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                 controller: Optional[str] = None,
                 faults: Optional[FaultSchedule] = None,
                 recover: bool = True,
-                heartbeat_timeout_s: float = 0.02) -> Fleet:
+                heartbeat_timeout_s: float = 0.02,
+                prefix_cache: bool = False,
+                pool_pages: Optional[int] = None) -> Fleet:
     """Plan once per distinct spec, instantiate one replica per entry.
 
     With ``transfer_from`` (a chip name appearing in ``specs``), every
@@ -555,6 +563,12 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
     :class:`~repro.fleet.metering.TransferCostModel` charging each KV
     page-block migration (payload derived analytically from ``cfg`` at
     ``kv_dtype`` storage width) into the books.
+
+    ``prefix_cache=True`` gives every replica a radix prefix cache over
+    its page pool (admission splices cached prompt pages and bills only
+    the uncached suffix fraction of each prefill); ``pool_pages``
+    overrides the default never-backpressuring pool geometry so cache
+    eviction pressure is benchmarkable.
     """
     from ..parallel.plan_transfer import transfer_serve_plan
 
@@ -603,7 +617,10 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
             f"r{i}-{spec.chip}{suffix}", spec, plan, tables[base],
             wake_latency_s=wake_latency_s,
             prefill_table=pre_tables[base],
-            controller=controller))
+            controller=controller,
+            prefix_cache=prefix_cache,
+            pool_pages=pool_pages,
+            cache_seed=seed + i))
     gov = fleet_governor
     if gov is None and power_cap_w is not None:
         gov = FleetGovernor(power_cap_w, interval_s=cap_interval_s)

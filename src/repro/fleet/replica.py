@@ -30,6 +30,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from ..cache import RadixCache
 from ..dvfs.session import DvfsSession
 from ..serve.kv_pages import PagePool
 from ..serve.scheduler import Scheduler
@@ -48,6 +49,26 @@ DEAD = "dead"
 UNIFIED = "unified"
 PREFILL = "prefill"
 DECODE = "decode"
+
+
+#: synthetic token-id bases for the modeled tier: a trace request has no
+#: real prompt tokens, so the radix key is built from collision-free
+#: ids — template position i of template t maps to one id fleet-wide
+#: (identical across replicas and requests, so shared prefixes match),
+#: while user-suffix position j of request uid is unique to the request.
+_TEMPLATE_BASE = 1 << 50
+_USER_BASE = 2 << 50
+_KEY_STRIDE = 100_000
+
+
+def request_token_key(req: TraceRequest) -> List[int]:
+    """Synthetic prompt token ids for the radix cache (modeled tier)."""
+    pl = min(req.prefix_len, req.prompt_len) if req.template_id >= 0 else 0
+    key = [_TEMPLATE_BASE + req.template_id * _KEY_STRIDE + i
+           for i in range(pl)]
+    key += [_USER_BASE + req.uid * _KEY_STRIDE + j
+            for j in range(req.prompt_len - pl)]
+    return key
 
 
 @dataclass
@@ -69,6 +90,9 @@ class RequestState:
     #: request is billed exactly once)
     needs_reprefill: bool = False
     link_attempts: int = 0                 # failed transfer attempts
+    #: prefix-cache: prompt tokens whose KV was spliced from the radix
+    #: tree at admission — the prefill only computes the remainder
+    cached_tokens: int = 0
 
     @property
     def done(self) -> bool:
@@ -120,7 +144,9 @@ class Replica:
                  prefill_table=None,
                  page_size: int = 16,
                  pool_max_seq: int = 512,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 cache_seed: int = 0):
         plan = session.governor.plan
         if plan is None or plan.kind != "serve":
             raise ValueError(f"replica {name!r} needs a session holding "
@@ -147,6 +173,12 @@ class Replica:
         if n_pages is None:
             n_pages = n_slots * max_blocks + 1
         self.pool = PagePool(n_pages, page_size, n_slots, max_blocks)
+        #: radix prefix cache over the pool (modeled: pages carry no
+        #: device KV, but refcounts / CoW / eviction run the same code
+        #: the engine's device-backed cache does, and prefill charges
+        #: shrink to the uncached suffix fraction)
+        self.prefix_cache: Optional[RadixCache] = \
+            RadixCache(page_size, seed=cache_seed) if prefix_cache else None
         self.wake_latency_s = wake_latency_s
         self.state = ACTIVE
         self.clock = 0.0
@@ -260,6 +292,15 @@ class Replica:
             self.state = DRAINING
             self.events.append({"t": self.clock, "event": "drain"})
 
+    def preempt_drain(self) -> None:
+        """Priority preemption: an ``interactive``-class request may pull
+        a draining replica back into service rather than wait for a wake
+        ramp elsewhere — draining means the chip is still at serving
+        clocks, so resuming costs nothing."""
+        if self.state == DRAINING:
+            self.state = ACTIVE
+            self.events.append({"t": self.clock, "event": "preempt_drain"})
+
     def park(self) -> None:
         """Enter the deepest frequency state.  Only an empty replica can
         park; drain first to flush in-flight work."""
@@ -298,6 +339,10 @@ class Replica:
             # release() bills a completion; a crash eviction is not one
             self.scheduler.n_completed -= 1
             orphans["slots"].append(rs)
+        if self.prefix_cache is not None:
+            # cached KV died with the chip; drop every tree reference so
+            # the pool's conservation invariants hold post-crash
+            self.prefix_cache.flush(self.pool)
         self.state = DEAD
         self.dead_since = now
         stranded = sum(len(v) for v in orphans.values())
@@ -311,14 +356,18 @@ class Replica:
         if self.state == DEAD:
             raise RuntimeError(f"replica {self.name!r} is dead; the "
                                f"router must not send it work")
+        interactive = rs.req.slo_class == "interactive"
         if self.state == PARKED:
             self.unpark()                # routed-to-parked wakes the chip
         elif self.state == DRAINING:
-            raise RuntimeError(f"replica {self.name!r} is draining; "
-                               f"router must not send it new work")
+            if interactive:
+                self.preempt_drain()     # priority class un-drains
+            else:
+                raise RuntimeError(f"replica {self.name!r} is draining; "
+                                   f"router must not send it new work")
         rs.routed_to = self.name
         self.last_work_s = self.clock
-        self.scheduler.submit([rs])
+        self.scheduler.submit([rs], front=interactive)
 
     def has_work(self) -> bool:
         return bool(self.scheduler.pending or self.scheduler.n_active)
@@ -327,6 +376,65 @@ class Replica:
         """Optional token-level twin: a real ServeEngine built with this
         replica's ``executor`` (same phase hooks, same metering)."""
         self.engine = engine
+
+    # -- prefix cache ------------------------------------------------------
+    def cached_prefix_tokens(self, req: TraceRequest) -> int:
+        """Router probe: prompt tokens this replica's radix tree would
+        splice for ``req``.  Pure read — no LRU or hit-counter motion,
+        so scoring N candidates does not perturb their caches."""
+        if self.prefix_cache is None:
+            return 0
+        _, matched, tail = self.prefix_cache.match(
+            request_token_key(req), tail=True, touch=False)
+        return matched + (tail[1] if tail is not None else 0)
+
+    def _admit_pages(self, slot: int, rs: RequestState) -> bool:
+        """Reserve the whole-request page count, splicing cached prefix
+        pages read-only (CoW for a mid-page tail hit).  Mirrors
+        ``ServeEngine._allocate_paged``; sets ``rs.cached_tokens`` to the
+        prompt tokens whose prefill the splice absorbs."""
+        pool = self.pool
+        cache = self.prefix_cache
+        rs.cached_tokens = 0
+        if cache is None:
+            return pool.allocate(slot, rs.page_tokens)
+        need_pages = max(-(-rs.page_tokens // pool.page_size), 1)
+        shared: List[int] = []
+        matched = 0
+        tail = None
+        # migrated-in KV arrives by transfer and recovery re-prefills
+        # rebuild dead pages — only a fresh local prefill can splice
+        if rs.first_token_s is None and not rs.needs_reprefill:
+            pages, matched, tailhit = cache.match(
+                request_token_key(rs.req), tail=True)
+            shared = [int(p) for p in pages[:need_pages]]
+            matched = min(matched, len(shared) * pool.page_size)
+            if tailhit is not None and len(shared) + 1 <= need_pages:
+                tail = tailhit
+        splice = shared + ([tail[0]] if tail is not None else [])
+        fresh = need_pages - len(splice)
+        extra = 0 if tail is None else 1   # the CoW copy target page
+        if pool.n_free < fresh + extra:
+            cache.evict(pool, fresh + extra - pool.n_free)
+        if tail is not None and pool.n_free < fresh + 1:
+            tail, splice = None, list(shared)   # recompute tail instead
+        if not pool.allocate(slot, rs.page_tokens, shared=splice):
+            return False
+        if tail is not None:
+            pool.cow(slot, len(shared))
+        rs.cached_tokens = matched + (tail[1] if tail is not None else 0)
+        return True
+
+    def _insert_prompt(self, slot: int, rs: RequestState) -> None:
+        """Adopt the request's fully-prefilled prompt pages into the
+        radix tree — including a mixed template-tail + user-suffix chunk,
+        which is exactly what later mid-page tail matches CoW from."""
+        key = request_token_key(rs.req)
+        n_full = len(key) // self.pool.page_size
+        if n_full:
+            self.prefix_cache.insert(
+                key, [int(p) for p in self.pool.tables[slot, :n_full]],
+                self.pool)
 
     def _finish(self, slot: int, rs: RequestState) -> None:
         rs.finish_s = self.clock
@@ -369,7 +477,7 @@ class Replica:
             if nxt is None:
                 break
             slot, rs = nxt
-            if not self.pool.allocate(slot, rs.page_tokens):
+            if not self._admit_pages(slot, rs):
                 self.scheduler.requeue(slot)
                 if not int(self.pool.n_blocks.sum()):
                     # pool fully idle and the head still does not fit —
@@ -408,9 +516,16 @@ class Replica:
                     self._finish(slot, rs)
                 continue
             rs.admitted_s = self.clock
-            rec = self.executor.on_prefill()
+            # prefix hit: only the uncached suffix fraction of the
+            # prompt runs (and is billed) — at least one position always
+            # recomputes, matching the engine's spliced prefill
+            P = max(rs.req.prompt_len, 1)
+            frac = max(P - rs.cached_tokens, 1) / P
+            rec = self.executor.on_prefill(frac)
             self.busy_s += rec.time_s
             self.clock += rec.time_s
+            if self.prefix_cache is not None:
+                self._insert_prompt(slot, rs)
             rs.first_token_s = self.clock
             rs.prefilled_on = self.name
             rs.n_generated = 1
@@ -479,7 +594,7 @@ class Replica:
         # the prefill replica into the decode replica's book; the prefill
         # replica's completed list holds only its single-token finishes)
         tokens = sum(rs.n_generated for rs in self.completed)
-        return {"name": self.name, "chip": self.chip.name,
+        book = {"name": self.name, "chip": self.chip.name,
                 "role": self.role,
                 "n_migrated_out": self.n_migrated_out,
                 "n_migrated_in": self.n_migrated_in,
@@ -498,3 +613,8 @@ class Replica:
                 "n_completed": len(self.completed),
                 "governor_revision": self.governor.revision,
                 "executed": ex}
+        if self.prefix_cache is not None:
+            book["prefix_cache"] = self.prefix_cache.stats()
+            book["cached_prompt_tokens"] = sum(
+                rs.cached_tokens for rs in self.completed)
+        return book

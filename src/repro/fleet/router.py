@@ -21,10 +21,19 @@ Mirrors the ``dvfs.governors`` registry pattern::
   the SLO term spills to colder replicas before queues threaten the
   TTFT target — the Wilkins-style energy/SLO routing the fleet
   benchmark measures against the blind baselines.
+* ``cache-affinity`` — energy-slo scoring with prefix-cache locality:
+  each candidate's prefill term (energy *and* its TTFT contribution)
+  shrinks by the prompt fraction that replica's radix tree already
+  holds, so requests sharing a template gravitate to the replica that
+  cached it — without abandoning the SLO spill valve when that replica
+  backlogs.
 
-Routers only read replica *predictions* (plan segments + backlog); they
-never mutate replica state.  ``route`` returns the chosen replica; the
-fleet loop performs the actual enqueue.
+Routers only read replica *predictions* (plan segments + backlog +
+cache probes); they never mutate replica state.  ``route`` returns the
+chosen replica; the fleet loop performs the actual enqueue.  An
+``interactive``-SLO request may additionally be routed to a *draining*
+replica (priority preemption pulls it back into service — see
+``Replica.preempt_drain``).
 """
 from __future__ import annotations
 
@@ -61,6 +70,10 @@ class BaseRouter:
     def route(self, req: TraceRequest,
               replicas: Sequence[Replica]) -> Replica:
         cands = [r for r in replicas if r.routable]
+        if not cands and req.slo_class == "interactive":
+            # priority preemption: an interactive request may un-drain a
+            # replica still at serving clocks instead of paying a wake
+            cands = [r for r in replicas if r.state == "draining"]
         if not cands:
             # a fully drained/parked fleet still owes the request an
             # answer: wake the cheapest parked replica
@@ -161,3 +174,41 @@ class EnergySloRouter(BaseRouter):
 
     def pick(self, req, candidates):
         return min(candidates, key=lambda r: self.score(req, r))
+
+
+@register_router("cache-affinity")
+class CacheAffinityRouter(EnergySloRouter):
+    """Energy-SLO routing with prefix-cache locality.
+
+    Identical to :class:`EnergySloRouter` except the prefill term is
+    scaled by the **predicted uncached suffix fraction**: probing each
+    candidate's radix tree (:meth:`Replica.cached_prefix_tokens`, a pure
+    read) tells how much of the prompt it would splice instead of
+    recompute, shrinking both the prefill energy and its TTFT
+    contribution::
+
+        suffix(r) = max(prompt_len - cached(r), 1) / prompt_len
+        E(r) = prefill_energy(r) * suffix(r)
+             + max_new_tokens * decode_energy_per_token(r, occupancy')
+        ttft_hat = wait_hat(r) + prefill_time(r) * suffix(r)
+
+    Requests sharing a template therefore gravitate to the replica that
+    already cached it (which *keeps* it warm — affinity is
+    self-reinforcing), while the unchanged SLO risk term still spills to
+    colder replicas once the hot replica's queue threatens the target.
+    On replicas without a prefix cache the probe returns 0 and the score
+    degrades to exactly the energy-slo score.
+    """
+
+    def score(self, req: TraceRequest, r: Replica) -> float:
+        occ = min(r.n_active + r.n_queued + 1, r.n_slots)
+        P = max(req.prompt_len, 1)
+        suffix = max(P - r.cached_prefix_tokens(req), 1) / P
+        energy = r.prefill_energy_j * suffix \
+            + req.max_new_tokens * r.decode_energy_per_token(occ)
+        ttft_hat = r.est_wait_s() + r.prefill_time_s * suffix
+        if r.state == "parked":
+            ttft_hat += r.wake_latency_s
+            energy += r.idle_power_w * r.wake_latency_s
+        risk = max(ttft_hat / self.slo_ttft_s - self.slack, 0.0) ** 2
+        return energy * (1.0 + self.slo_weight * risk)

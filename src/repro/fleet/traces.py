@@ -55,23 +55,51 @@ def register_arrivals(name: str):
 
 @dataclass(frozen=True)
 class TraceRequest:
-    """One open-loop arrival: when it lands and how big it is."""
+    """One open-loop arrival: when it lands and how big it is.
+
+    Tenant-tagged workloads additionally carry who sent it (``tenant``),
+    its latency class (``slo_class``: ``interactive`` requests jump
+    admission queues and may preempt a draining replica, ``batch`` never
+    does), and the shared-prefix recipe: the first ``prefix_len`` prompt
+    tokens are the tenant's template ``template_id``, identical across
+    every request carrying it — what the radix prefix cache feeds on.
+    The defaults reproduce the legacy untagged request exactly, and
+    :meth:`to_dict` emits only non-default fields so legacy trace JSON
+    stays bit-identical.
+    """
 
     uid: int
     arrival_s: float
     prompt_len: int
     max_new_tokens: int
+    tenant: str = ""
+    slo_class: str = "standard"
+    template_id: int = -1
+    prefix_len: int = 0
 
     def to_dict(self) -> Dict:
-        return {"uid": self.uid, "arrival_s": self.arrival_s,
-                "prompt_len": self.prompt_len,
-                "max_new_tokens": self.max_new_tokens}
+        d = {"uid": self.uid, "arrival_s": self.arrival_s,
+             "prompt_len": self.prompt_len,
+             "max_new_tokens": self.max_new_tokens}
+        if self.tenant:
+            d["tenant"] = self.tenant
+        if self.slo_class != "standard":
+            d["slo_class"] = self.slo_class
+        if self.template_id != -1:
+            d["template_id"] = self.template_id
+        if self.prefix_len:
+            d["prefix_len"] = self.prefix_len
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict) -> "TraceRequest":
         return cls(uid=int(d["uid"]), arrival_s=float(d["arrival_s"]),
                    prompt_len=int(d["prompt_len"]),
-                   max_new_tokens=int(d["max_new_tokens"]))
+                   max_new_tokens=int(d["max_new_tokens"]),
+                   tenant=str(d.get("tenant", "")),
+                   slo_class=str(d.get("slo_class", "standard")),
+                   template_id=int(d.get("template_id", -1)),
+                   prefix_len=int(d.get("prefix_len", 0)))
 
 
 @dataclass
@@ -247,6 +275,92 @@ def generate_trace(process: str = "poisson", *, n_requests: int = 200,
     meta = {"process": process, "n_requests": n_requests,
             "rate_rps": rate_rps, "seed": seed,
             "prompt_lens": list(prompt_lens),
+            "mean_new_tokens": mean_new_tokens,
+            "straggler_every": straggler_every,
+            "straggler_tokens": straggler_tokens, **process_kwargs}
+    return Trace(requests=reqs, meta=meta)
+
+
+#: per-SLO-class TTFT targets (s): interactive chat, standard API,
+#: throughput batch.  Routers and replicas read these off the request's
+#: ``slo_class`` tag.
+SLO_TTFT_S: Dict[str, float] = {"interactive": 0.05, "standard": 0.1,
+                                "batch": 0.5}
+
+
+def generate_tenant_trace(process: str = "poisson", *,
+                          n_requests: int = 200, rate_rps: float = 40.0,
+                          seed: int = 0, n_tenants: int = 4,
+                          templates_per_tenant: int = 2,
+                          zipf_alpha: float = 1.1,
+                          template_lens: Sequence[int] = (24, 40, 56),
+                          suffix_lens: Sequence[int] = (8, 16, 32),
+                          suffix_weights: Optional[Sequence[float]] = None,
+                          slo_classes: Sequence[str] = ("interactive",
+                                                        "standard",
+                                                        "batch"),
+                          mean_new_tokens: int = 8,
+                          straggler_every: int = 4,
+                          straggler_tokens: int = 48,
+                          **process_kwargs) -> Trace:
+    """Multi-tenant trace with Zipf-shared prefix templates.
+
+    Every tenant owns ``templates_per_tenant`` prompt templates (fixed
+    lengths cycled from ``template_lens`` — deliberately not all
+    page-aligned, so partial-page tails exercise the cache's
+    copy-on-write path).  Template *popularity* is Zipf(``zipf_alpha``)
+    over all templates — the empirical shape of shared system prompts —
+    so a small set of hot templates dominates and a prefix cache's hit
+    rate rises with ``zipf_alpha``.  Each request draws a template
+    (fixing ``tenant``, ``template_id``, ``prefix_len`` and the tenant's
+    SLO class, cycled from ``slo_classes``) plus a private suffix from
+    ``suffix_lens``; generation lengths keep :func:`generate_trace`'s
+    skewed straggler mix so the decode-bucket spectrum matches the DVFS
+    plans.
+    """
+    if process not in ARRIVALS:
+        raise ValueError(f"unknown arrival process {process!r}; "
+                         f"registered: {sorted(ARRIVALS)}")
+    if n_tenants < 1 or templates_per_tenant < 1:
+        raise ValueError("need >= 1 tenant and >= 1 template per tenant")
+    rng = np.random.default_rng(seed)
+    arrivals = ARRIVALS[process](rng, n_requests, rate_rps,
+                                 **process_kwargs)
+    n_templates = n_tenants * templates_per_tenant
+    pop = 1.0 / np.arange(1, n_templates + 1) ** float(zipf_alpha)
+    pop = pop / pop.sum()
+    tlens = [int(template_lens[t % len(template_lens)])
+             for t in range(n_templates)]
+    if suffix_weights is None:
+        w = np.full(len(suffix_lens), 1.0 / len(suffix_lens))
+    else:
+        w = np.asarray(suffix_weights, dtype=float)
+        w = w / w.sum()
+    picks = rng.choice(n_templates, size=n_requests, p=pop)
+    suffixes = rng.choice(np.asarray(suffix_lens), size=n_requests, p=w)
+    reqs = []
+    for i in range(n_requests):
+        t = int(picks[i])
+        tenant_idx = t % n_tenants
+        straggler = straggler_every \
+            and i % straggler_every == 1 % straggler_every
+        new = straggler_tokens if straggler \
+            else int(rng.integers(max(mean_new_tokens // 2, 1),
+                                  mean_new_tokens + 2))
+        reqs.append(TraceRequest(
+            uid=i, arrival_s=float(arrivals[i]),
+            prompt_len=tlens[t] + int(suffixes[i]),
+            max_new_tokens=new,
+            tenant=f"tenant{tenant_idx}",
+            slo_class=slo_classes[tenant_idx % len(slo_classes)],
+            template_id=t, prefix_len=tlens[t]))
+    meta = {"process": process, "n_requests": n_requests,
+            "rate_rps": rate_rps, "seed": seed,
+            "n_tenants": n_tenants, "n_templates": n_templates,
+            "zipf_alpha": zipf_alpha,
+            "template_lens": list(template_lens),
+            "suffix_lens": list(suffix_lens),
+            "slo_classes": list(slo_classes),
             "mean_new_tokens": mean_new_tokens,
             "straggler_every": straggler_every,
             "straggler_tokens": straggler_tokens, **process_kwargs}

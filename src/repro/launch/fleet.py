@@ -16,6 +16,8 @@ Examples::
         --power-cap 340 --rate 120
     python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
         --faults storm --controller rate-limited --rate 120
+    python -m repro.launch.fleet --replicas 3xtpu-v5e:4 \
+        --prefix-cache --tenants 4 --router cache-affinity --rate 150
 """
 from __future__ import annotations
 
@@ -25,8 +27,8 @@ import os
 
 from ..configs import get_config
 from ..fleet import (FaultInjector, FaultSchedule, FleetGovernor,
-                     build_fleet, generate_faults, generate_trace,
-                     parse_replica_specs, router)
+                     build_fleet, generate_faults, generate_tenant_trace,
+                     generate_trace, parse_replica_specs, router)
 
 
 def main():
@@ -65,6 +67,17 @@ def main():
                     help="frequency-controller backend per replica "
                          "(e.g. rate-limited; needed for driver-fail "
                          "fault events to bite)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the per-replica radix prefix cache "
+                         "(CoW-shared KV pages across requests)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="override each replica's KV page-pool size "
+                         "(default: sized for the slot count)")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="replay a multi-tenant trace with this many "
+                         "tenants (Zipf-shared prefix templates + "
+                         "per-tenant SLO classes) instead of the plain "
+                         "open-loop trace")
     ap.add_argument("--save-trace", default=None,
                     help="write the generated trace JSON here")
     ap.add_argument("--json", action="store_true",
@@ -73,19 +86,26 @@ def main():
 
     cfg = get_config(args.arch)
     specs = parse_replica_specs(args.replicas)
-    trace = generate_trace(args.process, n_requests=args.requests,
-                           rate_rps=args.rate, seed=args.seed,
-                           straggler_tokens=64, straggler_every=3)
+    if args.tenants:
+        trace = generate_tenant_trace(
+            args.process, n_requests=args.requests, rate_rps=args.rate,
+            seed=args.seed, n_tenants=args.tenants)
+    else:
+        trace = generate_trace(args.process, n_requests=args.requests,
+                               rate_rps=args.rate, seed=args.seed,
+                               straggler_tokens=64, straggler_every=3)
     if args.save_trace:
         trace.save(args.save_trace)
     rt = router(args.router, slo_ttft_s=args.slo_ttft) \
-        if args.router == "energy-slo" else args.router
+        if args.router in ("energy-slo", "cache-affinity") else args.router
     gov = FleetGovernor(args.power_cap) if args.power_cap else None
     fleet = build_fleet(specs, cfg, router=rt, fleet_governor=gov,
                         autopark_idle_s=args.autopark,
                         transfer_from=args.transfer_from,
                         seed=args.seed, controller=args.controller,
-                        recover=not args.no_recover)
+                        recover=not args.no_recover,
+                        prefix_cache=args.prefix_cache,
+                        pool_pages=args.pool_pages)
     if args.faults:
         # schedules are built against the fleet's replica names, so the
         # injector is attached after the replicas exist
@@ -113,6 +133,21 @@ def main():
           f"{rep['ttft_p99_s']*1e3:.0f} ms, TPOT p99 "
           f"{rep['tpot_p99_s']*1e3:.1f} ms, "
           f"{rep['n_completed']}/{args.requests} completed")
+    if args.prefix_cache:
+        cs = [b["prefix_cache"] for b in rep["replicas"]
+              if "prefix_cache" in b]
+        hits = sum(c["hits"] for c in cs)
+        look = hits + sum(c["misses"] for c in cs)
+        cached = sum(b.get("cached_prompt_tokens", 0)
+                     for b in rep["replicas"])
+        prompt = sum(r.prompt_len for r in trace.requests) or 1
+        pools = [b["pool"] for b in rep["replicas"]]
+        print(f"[fleet] prefix cache: {hits}/{look} hits "
+              f"({hits / max(look, 1) * 100:.0f}%), "
+              f"{cached} prompt tokens served from cache "
+              f"({cached / prompt * 100:.0f}%), "
+              f"{sum(p['cow_copies'] for p in pools)} CoW copies, "
+              f"{sum(p['evictions'] for p in pools)} evictions")
     if rep.get("n_migrations"):
         print(f"[fleet] disaggregated: {rep['n_migrations']} KV "
               f"migrations, {rep['migration_bytes']/1e6:.1f} MB moved, "

@@ -2,9 +2,10 @@ from .engine import ServeEngine, Request, sample_token
 from .scheduler import Scheduler
 from .batch_state import BatchState
 from .kv_pages import (KV_DTYPES, PagePool, PagedBatchState,
-                       kv_dtype_bytes, resolve_kv_dtype)
+                       cow_copy_block, kv_dtype_bytes, resolve_kv_dtype)
 from .wave import WaveEngine
 
 __all__ = ["ServeEngine", "Request", "sample_token", "Scheduler",
            "BatchState", "PagePool", "PagedBatchState", "WaveEngine",
-           "KV_DTYPES", "kv_dtype_bytes", "resolve_kv_dtype"]
+           "KV_DTYPES", "cow_copy_block", "kv_dtype_bytes",
+           "resolve_kv_dtype"]

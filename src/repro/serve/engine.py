@@ -54,8 +54,10 @@ import numpy as np
 from jax import lax
 
 from .batch_state import BatchState
-from .kv_pages import PagedBatchState, scale_key, write_prefill_pages
+from .kv_pages import (PagedBatchState, cow_copy_block, scale_key,
+                       write_prefill_pages)
 from .scheduler import Scheduler
+from ..cache import RadixCache, extras_namespace
 from ..models import common as cm
 
 
@@ -108,7 +110,8 @@ class ServeEngine:
                  seed: int = 0, executor=None, max_chunk: int = 16,
                  eos_token: Optional[int] = None, paged: bool = False,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 prefix_cache: bool = False):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -129,6 +132,16 @@ class ServeEngine:
         if kv_dtype not in (None, "none") and not paged:
             raise ValueError("kv_dtype quantization needs paged=True "
                              "(only page pools carry scale tables)")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache needs paged=True (sharing is "
+                             "a block-table splice)")
+        # radix prefix index over the page pool: admission splices cached
+        # prefix pages read-only into the slot's block table (divergent
+        # tail pages copy-on-write), and finished prefills adopt their
+        # fully-valid pages into the tree
+        self.prefix_cache: Optional[RadixCache] = \
+            RadixCache(page_size, seed=seed) if prefix_cache else None
+        self._slot_shared: Dict[int, int] = {}  # slot -> spliced full pages
         self.scheduler = Scheduler(batch_slots)
         self.state = self._new_state()
         self.n_decode_steps = 0           # jitted chunk-steps executed
@@ -157,6 +170,9 @@ class ServeEngine:
         self.state = self._new_state()
         self.n_decode_steps = 0
         self._pending_first = []
+        if self.prefix_cache is not None:
+            self.prefix_cache = RadixCache(self.page_size, seed=self.seed)
+        self._slot_shared = {}
         if self.executor is not None:
             self.executor.reset()
 
@@ -273,6 +289,64 @@ class ServeEngine:
         pe = req.extras.get("patch_embeds")
         return 0 if pe is None else pe.shape[1]
 
+    def _cache_key(self, req: Request) -> Tuple[int, List[int]]:
+        """(namespace, position-token stream) identifying the request's
+        cache pages.  Extras (encoder frames, patch embeds) shift or
+        condition every K/V position, so they pick the namespace; a
+        vision prefix contributes sentinel positions (its content is
+        pinned by the namespace), then the prompt ids follow."""
+        ns = extras_namespace(req.extras)
+        return ns, [-1] * self._req_prefix(req) \
+            + [int(t) for t in np.asarray(req.prompt, np.int64)]
+
+    def _prefix_match(self, req: Request, need: int):
+        """Cached pages spliceable into a ``need``-token reservation:
+        ``(full_pages, tail_hit)`` with the tail (a partially matching
+        page the request will overwrite past the match) only taken when
+        the reservation has a block left for its copy."""
+        if self.prefix_cache is None:
+            return [], None
+        ns, key = self._cache_key(req)
+        pages, _, tail = self.prefix_cache.match(key, ns=ns, tail=True)
+        need_pages = max(-(-need // self.page_size), 1)
+        if len(pages) > need_pages:         # defensive: cannot trigger,
+            pages, tail = pages[:need_pages], None   # matched <= need
+        if tail is not None and len(pages) + 1 > need_pages:
+            tail = None
+        return pages, tail
+
+    def _allocate_paged(self, slot: int, req: Request, need: int) -> bool:
+        """Reserve ``slot``'s pages, splicing any cached prefix; on pool
+        pressure, evict cold tree-only pages and retry before deferring.
+        A tail (partial-page) hit is copy-on-write-resolved immediately:
+        the divergent suffix write span is already known at admission,
+        so the copy happens here rather than via a per-token fault."""
+        pool = self.state.pool
+        shared, tail = self._prefix_match(req, need)
+        splice = list(shared) + ([tail[0]] if tail is not None else [])
+        need_pages = max(-(-need // self.page_size), 1)
+        fresh = need_pages - len(splice)
+        extra = 0 if tail is None else 1        # the CoW copy target page
+        if self.prefix_cache is not None and pool.n_free < fresh + extra:
+            self.prefix_cache.evict(pool, fresh + extra - pool.n_free)
+        if tail is not None and pool.n_free < fresh + 1:
+            # no page left for the copy: fall back to a plain full-page
+            # splice (the prefill recomputes the tail anyway)
+            tail, splice = None, list(shared)
+        ok = pool.allocate(slot, need, shared=splice)
+        if not ok:
+            if not int(pool.n_blocks.sum()):  # no slot holds pages: the
+                # request can never fit, backpressure would deadlock
+                raise ValueError(
+                    f"request {req.uid} needs {need} tokens; the "
+                    f"page pool holds "
+                    f"{pool.n_free * pool.page_size} usable")
+            return False
+        self._slot_shared[slot] = len(shared)
+        if tail is not None:
+            cow_copy_block(self.state, slot, len(shared))
+        return True
+
     def _admit(self) -> None:
         """Admit every admissible queued request, bucketed by prompt
         length: one jitted (prefill + install + activate) call per
@@ -300,18 +374,12 @@ class ServeEngine:
                     f"{req.max_new_tokens} new tokens exceeds "
                     f"max_seq={self.max_seq}")
             if self.paged:
-                pool = self.state.pool
                 # positions written: prompt 0..P-1, decode P..P+new-2 (the
                 # final sampled token is emitted, never cached); a frozen
                 # slot's parked re-write one past that lands in the
                 # parking page if its block is unallocated
                 need = prefix + prompt.size + req.max_new_tokens - 1
-                if not pool.allocate(slot, need):
-                    if pool.n_free == pool.n_pages - 1:   # pool fully idle
-                        raise ValueError(
-                            f"request {req.uid} needs {need} tokens; the "
-                            f"page pool holds "
-                            f"{pool.n_free * pool.page_size} usable")
+                if not self._allocate_paged(slot, req, need):
                     # pool exhausted: undo this admission, wait for frees
                     self.scheduler.requeue(slot)
                     break
@@ -364,6 +432,13 @@ class ServeEngine:
             for i, (slot, _) in enumerate(pairs):
                 nb = int(pool.n_blocks[slot])
                 tables_sub[i, :nb] = pool.tables[slot, :nb]
+                # spliced prefix pages are shared read-only: this row's
+                # prefill re-derives their K/V bit-identically, so the
+                # redundant writes (and scale updates) are dropped by
+                # pointing them out of range.  Decode reads still see the
+                # real ids through the device block tables.
+                ns = self._slot_shared.pop(slot, 0)
+                tables_sub[i, :ns] = pool.n_pages
             args.append(jnp.asarray(tables_sub))
         if self.executor is not None:
             for _ in pairs:
@@ -371,6 +446,18 @@ class ServeEngine:
         (first, self.state.cache, self.state.tokens, self.state.pos,
          self.state.remaining, self.rng) = \
             self._prefill_fn(bucket)(*args, **extras)
+        if self.prefix_cache is not None:
+            # adopt every fully-valid prompt page (positions < prefix +
+            # prompt only; the decode span never enters the tree) —
+            # shared head chunks are already nodes, fresh tails retain
+            pool = self.state.pool
+            for slot, req in pairs:
+                ns, key = self._cache_key(req)
+                n_full = len(key) // self.page_size
+                if n_full:
+                    self.prefix_cache.insert(
+                        key, [int(p) for p in pool.tables[slot, :n_full]],
+                        pool, ns=ns)
         self._pending_first.append((self.n_decode_steps, list(pairs),
                                     first))
 
@@ -476,3 +563,14 @@ class ServeEngine:
 
     def energy_summary(self) -> Optional[Dict]:
         return None if self.executor is None else self.executor.summary()
+
+    def prefix_cache_stats(self) -> Optional[Dict]:
+        """Radix-tree hit/occupancy counters plus the pool's sharing
+        life-cycle counters; None when the cache is off."""
+        if self.prefix_cache is None:
+            return None
+        ps = self.state.pool.stats()
+        return {**self.prefix_cache.stats(),
+                "shared_pages": ps["shared_pages"],
+                "cow_copies": ps["cow_copies"],
+                "evictions": ps["evictions"]}

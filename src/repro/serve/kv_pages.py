@@ -51,7 +51,7 @@ the payload (<0.5% at the default 16×64 pages) and is charged to
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -125,14 +125,22 @@ class PagePool:
         # LIFO free list: freed pages are reused first (warm in cache);
         # page 0 is the reserved parking page and is never handed out
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        # per-page reference counts: 0 = free (or parking), 1 = exclusive
+        # (writable), > 1 = shared read-only (slots + radix-tree nodes)
+        self.refcounts = np.zeros(n_pages, np.int32)
         # unallocated entries hold the parking page
         self.tables = np.zeros((n_slots, max_blocks), np.int32)
         self.n_blocks = np.zeros(n_slots, np.int32)     # allocated per slot
         self.used_tokens = np.zeros(n_slots, np.int64)  # capacity actually
         #                                               # needed (frag stat)
         self._peak_allocated = 0    # high-water mark of allocated pages
-        # bumped on every successful allocate/free; device-table mirrors
-        # compare against it to skip redundant host->device uploads
+        self.cow_copies = 0         # copy-on-write page copies resolved
+        self.evictions = 0          # tree-only pages reclaimed by evictors
+        # bumped whenever the block-table map changes (allocate / free /
+        # CoW swap); device-table mirrors compare against it to skip
+        # redundant host->device uploads.  Pure refcount motion (retain /
+        # release of a page that stays mapped) does NOT bump it — the
+        # tables are unchanged, so the dirty-flag fast path holds.
         self.version = 0
 
     # -- allocator --------------------------------------------------------
@@ -140,12 +148,17 @@ class PagePool:
     def n_free(self) -> int:
         return len(self._free)
 
-    def allocate(self, slot: int, n_tokens: int) -> bool:
+    def allocate(self, slot: int, n_tokens: int,
+                 shared: Sequence[int] = ()) -> bool:
         """Reserve pages covering ``n_tokens`` positions for ``slot``.
 
-        Returns False (allocating nothing) when the pool cannot cover the
-        request — the caller defers admission.  A slot must be freed
-        before it can be re-allocated.
+        ``shared`` splices already-resident pages (a radix-cache prefix
+        match) into the head of the slot's block table: each is retained
+        (refcount + 1) instead of drawn from the free list, so only the
+        uncached tail consumes fresh pages.  Returns False (allocating
+        and retaining nothing) when the pool cannot cover the request —
+        the caller defers admission.  A slot must be freed before it can
+        be re-allocated.
         """
         if self.n_blocks[slot]:
             raise ValueError(f"slot {slot} already holds pages")
@@ -153,44 +166,140 @@ class PagePool:
         if need > self.max_blocks:
             raise ValueError(f"request needs {need} blocks > table width "
                              f"{self.max_blocks}")
-        if need > len(self._free):
+        shared = [int(p) for p in shared]
+        if len(shared) > need:
+            raise ValueError(f"{len(shared)} shared pages exceed the "
+                             f"request's {need}-page reservation")
+        if len(set(shared)) != len(shared) \
+                or any(not 0 < p < self.n_pages for p in shared):
+            raise ValueError(f"bad shared page list {shared}")
+        if any(self.refcounts[p] < 1 for p in shared):
+            raise ValueError("shared pages must be live (refcount >= 1)")
+        fresh = need - len(shared)
+        if fresh > len(self._free):
             return False
-        pages = [self._free.pop() for _ in range(need)]
+        # all-or-nothing: the checks above ran before any refcount moved,
+        # so a False return leaks no retains
+        for p in shared:
+            self.refcounts[p] += 1
+        pages = shared + [self._free.pop() for _ in range(fresh)]
+        for p in pages[len(shared):]:
+            self.refcounts[p] = 1
         self.tables[slot, :need] = pages
         self.tables[slot, need:] = 0
         self.n_blocks[slot] = need
         self.used_tokens[slot] = int(n_tokens)
         self._peak_allocated = max(self._peak_allocated,
-                                   int(self.n_blocks.sum()))
+                                   self.n_pages - 1 - len(self._free))
         self.version += 1
         return True
 
     def free(self, slot: int) -> None:
-        """Return a slot's pages to the free list."""
+        """Release a slot's pages: every refcount drops by one, and only
+        pages nobody else holds (no other slot, no radix-tree node)
+        return to the free list."""
         n = int(self.n_blocks[slot])
         if n == 0:
             raise ValueError(f"slot {slot} holds no pages")
-        self._free.extend(int(p) for p in self.tables[slot, :n])
+        for p in self.tables[slot, :n]:
+            self.release_page(int(p))
         self.tables[slot, :] = 0
         self.n_blocks[slot] = 0
         self.used_tokens[slot] = 0
         self.version += 1
 
+    def retain_page(self, page: int) -> None:
+        """Add a reference to a live page (radix-tree adoption).  Pure
+        refcount motion: the block-table map is untouched, so ``version``
+        stays put and device mirrors skip the re-upload."""
+        if not 0 < page < self.n_pages:
+            raise ValueError(f"page {page} out of range (parking page 0 "
+                             f"is never retained)")
+        if self.refcounts[page] < 1:
+            raise ValueError(f"page {page} is free; retain needs a live "
+                             f"page")
+        self.refcounts[page] += 1
+
+    def release_page(self, page: int) -> None:
+        """Drop one reference; the page returns to the free list at zero.
+
+        Releasing an already-free page raises — a double release (e.g.
+        requeue-at-head backpressure replaying a partial splice) must
+        fail loudly instead of planting a duplicate free-list entry that
+        the allocator would later hand to two slots at once.
+        """
+        if not 0 < page < self.n_pages:
+            raise ValueError(f"page {page} out of range")
+        if self.refcounts[page] < 1:
+            raise ValueError(f"double release of page {page} "
+                             f"(refcount already 0)")
+        self.refcounts[page] -= 1
+        if self.refcounts[page] == 0:
+            self._free.append(int(page))
+
+    def evict_page(self, page: int) -> None:
+        """Evictor entry point: reclaim a page only the radix tree still
+        holds.  Refcount must be exactly 1 — evicting a page a slot is
+        reading raises instead of yanking live KV."""
+        if self.refcounts[page] != 1:
+            raise ValueError(f"page {page} refcount "
+                             f"{int(self.refcounts[page])}: only "
+                             f"refcount-1 (tree-only) pages are evictable")
+        self.release_page(page)
+        self.evictions += 1
+
+    def cow(self, slot: int, block: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write ``slot``'s ``block`` ahead of a divergent write.
+
+        A shared page (refcount > 1) is swapped for a fresh exclusive
+        one; returns ``(old, new)`` so the caller copies payload + scale
+        rows on device.  An already-exclusive page returns None (write in
+        place).  Raises when no free page is available — the caller
+        evicts or defers.
+        """
+        if block >= int(self.n_blocks[slot]):
+            raise ValueError(f"slot {slot} block {block} not allocated")
+        old = int(self.tables[slot, block])
+        if self.refcounts[old] <= 1:
+            return None
+        if not self._free:
+            raise RuntimeError("copy-on-write needs a free page; evict or "
+                               "defer the write")
+        new = self._free.pop()
+        self.refcounts[new] = 1
+        self.refcounts[old] -= 1        # was > 1: never reaches zero here
+        self.tables[slot, block] = new
+        self.cow_copies += 1
+        self._peak_allocated = max(self._peak_allocated,
+                                   self.n_pages - 1 - len(self._free))
+        self.version += 1
+        return old, new
+
     # -- accounting -------------------------------------------------------
     def stats(self) -> Dict:
         """Occupancy + internal fragmentation (allocated-but-unneeded
         token capacity; pages are fixed-size, so there is no external
-        fragmentation by construction).  ``peak_allocated_pages`` is the
-        lifetime high-water mark — the number capacity claims cite."""
-        allocated = int(self.n_blocks.sum())
+        fragmentation by construction).  ``allocated_pages`` counts
+        *distinct* live pages (a shared prefix page counts once however
+        many block tables map it); ``peak_allocated_pages`` is the
+        lifetime high-water mark — the number capacity claims cite.
+        ``shared_pages`` / ``cow_copies`` / ``evictions`` expose the
+        prefix-cache life cycle: pages currently mapped by more than one
+        holder, divergent writes resolved by page copy, and tree-only
+        pages reclaimed under pool pressure."""
+        allocated = self.n_pages - 1 - len(self._free)
         cap = allocated * self.page_size
         used = int(self.used_tokens.sum())
+        frag = max(cap - used, 0)       # shared pages can push used > cap
         return {"n_pages": self.n_pages, "page_size": self.page_size,
                 "allocated_pages": allocated, "free_pages": self.n_free,
                 "peak_allocated_pages": self._peak_allocated,
                 "used_tokens": used,
-                "internal_frag_tokens": cap - used,
-                "internal_frag_frac": (cap - used) / cap if cap else 0.0}
+                "shared_pages": int((self.refcounts > 1).sum()),
+                "cow_copies": self.cow_copies,
+                "evictions": self.evictions,
+                "internal_frag_tokens": frag,
+                "internal_frag_frac": frag / cap if cap else 0.0}
 
 
 class PagedBatchState:
@@ -251,6 +360,9 @@ class PagedBatchState:
         No-op when the pool's allocation version has not moved since the
         last sync — callers on the admission path may call this
         unconditionally without paying a host->device transfer per round.
+        Refcount-only motion (radix-tree retain/release of pages that
+        stay mapped) deliberately leaves ``version`` untouched, so the
+        fast path holds across cache inserts and evictions too.
         """
         if self._synced_version == self.pool.version:
             return
@@ -304,6 +416,31 @@ def write_prefill_pages(pool_leaf: jnp.ndarray, sub_leaf: jnp.ndarray,
                     pool_leaf.dtype, qmax)
     return (pool_leaf.at[:, flat].set(q, mode="drop"),
             scales.at[:, flat].set(new_scale, mode="drop"))
+
+
+def cow_copy_block(state: "PagedBatchState", slot: int, block: int) -> bool:
+    """Resolve a copy-on-write for ``slot``'s ``block`` on device.
+
+    Host side the pool swaps the slot onto a fresh exclusive page;
+    device side the shared page's payload (and its per-(page, KV-head)
+    scale row, when the pool is quantized) is copied into the new page,
+    so the writer diverges privately while every other holder keeps
+    reading the original bytes.  Returns True when a copy happened
+    (False: the page was already exclusive and writes land in place).
+    """
+    moved = state.pool.cow(slot, block)
+    if moved is None:
+        return False
+    old, new = moved
+    for k in state.paged_keys:
+        leaf = state.cache[k]
+        state.cache[k] = leaf.at[:, new].set(leaf[:, old])
+        if state.quant:
+            sk = scale_key(k)
+            state.cache[sk] = state.cache[sk].at[:, new].set(
+                state.cache[sk][:, old])
+    state.sync_tables()
+    return True
 
 
 # ---------------------------------------------------------------------------

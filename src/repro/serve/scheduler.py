@@ -31,8 +31,15 @@ class Scheduler:
         self.n_completed = 0
 
     # -- queue ------------------------------------------------------------
-    def submit(self, requests: Iterable) -> None:
-        self.queue.extend(requests)
+    def submit(self, requests: Iterable, front: bool = False) -> None:
+        """Append to the admission queue; ``front`` jumps the FCFS line
+        (priority classes — e.g. interactive-SLO requests preempting a
+        backlog of batch work).  Multiple front submissions keep their
+        relative order at the head."""
+        if front:
+            self.queue.extendleft(reversed(list(requests)))
+        else:
+            self.queue.extend(requests)
 
     @property
     def pending(self) -> int:

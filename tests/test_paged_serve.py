@@ -47,41 +47,56 @@ def test_page_pool_allocate_free_invariants():
 
 
 def test_page_pool_randomized_stress():
-    """Satellite invariant sweep: long interleaved admit/retire/requeue
-    sequences must never double-allocate a page, leak one, or hand out
-    the reserved parking page 0 — whatever order slots fill and free."""
+    """Satellite invariant sweep, now with prefix sharing: long
+    interleaved admit/retire/requeue/adopt/drop/splice/CoW sequences
+    must never double-allocate a page, leak one, corrupt a refcount, or
+    hand out the reserved parking page 0 — and the adversarial
+    interleavings (double-release of a shared page past refcount zero,
+    eviction of a page a slot still maps) must raise, not corrupt."""
     rng = np.random.default_rng(0)
     n_pages, page_size, n_slots, max_blocks = 33, 4, 6, 8
     pool = PagePool(n_pages=n_pages, page_size=page_size,
                     n_slots=n_slots, max_blocks=max_blocks)
-    held = {}                             # slot -> set of pages
+    held = {}                             # slot -> block-table page list
+    tree = set()                          # pages a simulated radix tree
+    #                                     # holds one retain each on
 
     def check():
-        live = [p for pages in held.values() for p in pages]
-        # no page granted twice, none of them parking, none leaked
-        assert len(live) == len(set(live))
+        # reference refcounts: slots mapping the page + the tree retain
+        model = {}
+        for pages in held.values():
+            assert len(pages) == len(set(pages))  # per-slot distinct
+            for p in pages:
+                model[p] = model.get(p, 0) + 1
+        for p in tree:
+            model[p] = model.get(p, 0) + 1
+        live = set(model)
+        # none of them parking, none leaked, none double-freed
         assert 0 not in live
         assert all(1 <= p < n_pages for p in live)
         assert pool.n_free + len(live) == n_pages - 1
         assert sorted(set(pool._free)) == sorted(pool._free)
         assert set(pool._free).isdisjoint(live) and 0 not in pool._free
+        for p in range(n_pages):
+            assert int(pool.refcounts[p]) == model.get(p, 0), p
         for slot in range(n_slots):
             n = int(pool.n_blocks[slot])
-            assert set(pool.tables[slot, :n].tolist()) \
-                == held.get(slot, set())
+            assert pool.tables[slot, :n].tolist() == held.get(slot, [])
             # unallocated tail always points at parking
             assert set(pool.tables[slot, n:].tolist()) <= {0}
 
-    for _ in range(2000):
-        op = rng.integers(3)
+    def grab(slot, want, shared=()):
+        if pool.allocate(slot, want, shared=shared):
+            n = int(pool.n_blocks[slot])
+            held[slot] = pool.tables[slot, :n].tolist()
+
+    for i in range(2000):
+        op = rng.integers(7)
         if op == 0:                       # admit into a free slot
             free = [s for s in range(n_slots) if s not in held]
             if free:
-                slot = int(rng.choice(free))
-                want = int(rng.integers(1, max_blocks * page_size + 1))
-                if pool.allocate(slot, want):
-                    n = int(pool.n_blocks[slot])
-                    held[slot] = set(pool.tables[slot, :n].tolist())
+                grab(int(rng.choice(free)),
+                     int(rng.integers(1, max_blocks * page_size + 1)))
         elif op == 1 and held:            # retire a finished request
             slot = int(rng.choice(list(held)))
             pool.free(slot)
@@ -91,14 +106,58 @@ def test_page_pool_randomized_stress():
             pool.free(slot)               # engine requeue frees the slot
             del held[slot]
             # the retried request may need a different page count
-            want = int(rng.integers(1, max_blocks * page_size + 1))
-            if pool.allocate(slot, want):
-                n = int(pool.n_blocks[slot])
-                held[slot] = set(pool.tables[slot, :n].tolist())
+            grab(slot, int(rng.integers(1, max_blocks * page_size + 1)))
+        elif op == 3:                     # radix adoption: retain a live
+            cand = [p for pages in held.values() for p in pages
+                    if p not in tree]
+            if cand:
+                p = int(rng.choice(cand))
+                v = pool.version          # pure refcount motion: the
+                pool.retain_page(p)       # device-mirror fast path holds
+                assert pool.version == v
+                tree.add(p)
+        elif op == 4 and tree:            # eviction/flush drops a retain
+            p = int(rng.choice(sorted(tree)))
+            v = pool.version
+            pool.release_page(p)
+            assert pool.version == v
+            tree.discard(p)
+        elif op == 5 and tree:            # prefix splice: shared admit
+            free = [s for s in range(n_slots) if s not in held]
+            if free:
+                k = int(rng.integers(1, min(len(tree), max_blocks) + 1))
+                shared = [int(p) for p in
+                          rng.choice(sorted(tree), size=k, replace=False)]
+                lo = max((k - 1) * page_size + 1, 1)
+                grab(int(rng.choice(free)),
+                     int(rng.integers(lo, max_blocks * page_size + 1)),
+                     shared=shared)
+        elif op == 6 and held and pool._free:   # CoW a shared block
+            slot = int(rng.choice(list(held)))
+            blocks = [b for b, p in enumerate(held[slot])
+                      if pool.refcounts[p] > 1]
+            if blocks:
+                block = int(rng.choice(blocks))
+                out = pool.cow(slot, block)
+                assert out is not None
+                held[slot][block] = out[1]
+        if i % 97 == 0:                   # adversarial: must raise, not
+            if pool._free:                # corrupt the free list
+                with pytest.raises(ValueError):   # release past zero —
+                    pool.release_page(int(pool._free[-1]))  # the double
+                    # release of a page whose sharers all already let go
+            pinned = [p for p in range(1, n_pages)
+                      if pool.refcounts[p] > 1]
+            if pinned:                    # a mapped page is never evicted
+                with pytest.raises(ValueError):
+                    pool.evict_page(int(rng.choice(pinned)))
         check()
     for slot in list(held):
         pool.free(slot)
         del held[slot]
+    for p in sorted(tree):
+        pool.release_page(p)
+    tree.clear()
     check()
     assert pool.n_free == n_pages - 1     # drained: nothing leaked
 

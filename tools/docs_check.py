@@ -15,6 +15,10 @@ Checks all ``docs/*.md`` files:
 * registry coverage — every benchmark registered in ``benchmarks/run.py``
   must be *mentioned* in ``docs/claims.md`` (a benchmark nobody maps to
   a claim is a benchmark nobody can interpret or trust);
+* smoke-gate coverage — every ``python -m benchmarks.<name>`` line of
+  the Makefile's ``bench-smoke`` recipe must name a registered
+  benchmark, so each CI perf gate is reproducible via ``make bench``
+  and (through registry coverage) mapped in ``docs/claims.md``;
 * fenced ``json`` blocks that carry a ``schema_version`` key — validated
   as :class:`repro.dvfs.DvfsPlan` documents against the IR schema
   (``repro.dvfs.validate_plan_dict``), so the plan examples embedded in
@@ -66,6 +70,23 @@ def _make_targets():
             if m:
                 targets.add(m.group(1))
     return targets
+
+
+def bench_smoke_modules():
+    """Yield (lineno, name) for each ``-m benchmarks.<name>`` command in
+    the Makefile's ``bench-smoke`` recipe."""
+    in_target = False
+    with open(os.path.join(ROOT, "Makefile")) as f:
+        for i, line in enumerate(f, 1):
+            if re.match(r"^bench-smoke\s*:", line):
+                in_target = True
+                continue
+            if in_target:
+                if line.strip() and not line.startswith("\t"):
+                    break
+                m = re.search(r"-m\s+benchmarks\.([A-Za-z0-9_]+)", line)
+                if m:
+                    yield i, m.group(1)
 
 
 def _gitignored(path: str) -> bool:
@@ -271,6 +292,17 @@ def main() -> int:
     else:
         errors.append("docs/claims.md missing: the benchmark registry "
                       "has no claims map to be checked against")
+    # smoke-gate coverage: a bench-smoke line gating an unregistered
+    # benchmark is a CI failure nobody can reproduce with `make bench`
+    n_smoke = 0
+    for lineno, name in bench_smoke_modules():
+        n_smoke += 1
+        if name != "run" and name not in registry:
+            errors.append(
+                f"Makefile:{lineno}: bench-smoke runs "
+                f"'benchmarks.{name}', which is not registered in "
+                f"benchmarks/run.py — register it so its anchors are "
+                f"reproducible via `make bench`")
     if errors:
         print("docs-check FAILED:", file=sys.stderr)
         for e in errors:
@@ -279,6 +311,7 @@ def main() -> int:
     print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
           f"{n_refs} artifact refs, {n_plans} embedded plan(s), "
           f"{n_covered} registered benchmarks covered by claims.md, "
+          f"{n_smoke} bench-smoke gates registered, "
           f"{n_claim_tests} slow claim gates mapped")
     return 0
 
