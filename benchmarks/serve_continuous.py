@@ -105,8 +105,16 @@ def _drive(eng, vocab, n: int = N_REQUESTS, passes: int = 3) -> Dict:
 
 
 def _write_bench_file(payload: Dict) -> None:
+    # merge-write (the serve_prefix benchmark idiom): other benchmarks
+    # park their own anchors (prefix_*) in the same file, and a refresh
+    # of this benchmark's anchors must not silently drop theirs
+    merged: Dict = {}
+    if os.path.exists(BENCH_FILE):
+        with open(BENCH_FILE) as f:
+            merged = json.load(f)
+    merged.update(payload)
     with open(BENCH_FILE, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+        json.dump(merged, f, indent=1, default=float)
         f.write("\n")
 
 
@@ -219,6 +227,42 @@ def throughput_section(n_requests: int = N_REQUESTS,
     return out
 
 
+def trace_overhead_section(passes: int = 12) -> Dict:
+    """Tokens/sec with the obs tracer attached vs without, same smoke
+    engine; the ratio gates tracing's hot-path cost (<= 1% target).
+    The timed passes interleave the two engines in *alternating* order
+    and each side keeps its best — host scheduling noise at this scale
+    swings single runs +/-15%, far above the real cost of a few dict
+    appends (~10us/event, <1% of a run), and alternating best-of-N
+    pits both sides against the same noise floor."""
+    from repro.obs import Tracer
+    from repro.serve import ServeEngine
+
+    model, params, cfg = _smoke_model()
+    plain = ServeEngine(model, params, batch_slots=SLOTS, max_seq=MAX_SEQ)
+    tracer = Tracer(meta={"bench": "trace_overhead"})
+    traced = ServeEngine(model, params, batch_slots=SLOTS, max_seq=MAX_SEQ,
+                         tracer=tracer)
+    plain.generate(_requests(cfg.vocab_size))          # warm-up/compile
+    traced.generate(_requests(cfg.vocab_size))
+    times: Dict[str, List[float]] = {"plain": [], "traced": []}
+    tokens = 0
+    for i in range(passes):
+        order = (("plain", plain), ("traced", traced))
+        for name, eng in (order if i % 2 == 0 else order[::-1]):
+            eng.reset()
+            reqs = _requests(cfg.vocab_size)
+            t0 = time.perf_counter()
+            eng.generate(reqs)
+            times[name].append(time.perf_counter() - t0)
+            tokens = sum(len(r.generated) for r in reqs)
+    p = tokens / min(times["plain"])
+    t = tokens / min(times["traced"])
+    return {"plain_tokens_per_s": p, "traced_tokens_per_s": t,
+            "traced_events": len(tracer.events),
+            "trace_overhead": t / p}
+
+
 def planner_feedback_section(kv_dtype: str = KV_DTYPE,
                              n_reps: int = 10) -> Dict:
     """Re-plan the decode phases on the quantized workload model and
@@ -294,24 +338,34 @@ def main(verbose: bool = True, kv_dtype: str = KV_DTYPE) -> Dict:
                       kind="prefill")
     dec = ShapeConfig(name="serve_decode", seq_len=512, global_batch=SLOTS,
                       kind="decode")
-    sess = DvfsSession(chip="tpu-v5e", tau=TAU, n_reps=10)
+    from repro.obs import Tracer
+    tracer = Tracer(meta={"bench": "serve_continuous", "arch": ARCH,
+                          "chip": "tpu-v5e", "tau": TAU})
+    sess = DvfsSession(chip="tpu-v5e", tau=TAU, n_reps=10, tracer=tracer)
     sess.plan_serve(full, n_slots=SLOTS, prefill_shape=pre,
                     decode_shape=dec)
     planner_wall_s = sess.planner_wall_s
     chip = sess.chip
     model, params, cfg = _smoke_model()
     eng = ServeEngine(model, params, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      executor=sess.serve_executor())
+                      executor=sess.serve_executor(), tracer=tracer)
     eng.generate(_requests(cfg.vocab_size))
     energy = eng.energy_summary()
     sess.close()
+    os.makedirs("artifacts", exist_ok=True)
+    trace_path = tracer.save("artifacts/serve_continuous.trace.json")
+
+    # --- 4a. tracing overhead on the hot path (gated in bench-smoke) ----
+    overhead = trace_overhead_section()
 
     # --- 4b. roofline feedback: re-plan on the quantized workload -------
     feedback = planner_feedback_section(kv_dtype=kv_dtype)
 
     out.update({"tau": TAU, "energy": energy,
                 "planner_wall_s": planner_wall_s,
-                "quantized_plan": feedback})
+                "quantized_plan": feedback,
+                "trace_overhead": overhead,
+                "trace_path": trace_path})
     save_artifact("serve_continuous", out)
 
     # --- 5. perf-trajectory anchor (repo root, diffed by future PRs) ----
@@ -334,6 +388,7 @@ def main(verbose: bool = True, kv_dtype: str = KV_DTYPE) -> Dict:
         "quantized_plan": feedback,
         "energy_pct": tot["energy_pct"], "time_pct": tot["time_pct"],
         "tau": TAU, "planner_wall_s": planner_wall_s,
+        "trace_overhead": overhead["trace_overhead"],
     })
 
     if verbose:
@@ -364,6 +419,9 @@ def main(verbose: bool = True, kv_dtype: str = KV_DTYPE) -> Dict:
         print(f"  compile    : {out['compile_stats']}")
         print(f"  planner    : {planner_wall_s:.2f}s wall "
               f"(vectorized phase-bundle planning)")
+        print(f"  tracing    : {overhead['trace_overhead']:.3f}x tokens/s "
+              f"with tracer attached ({overhead['traced_events']} events); "
+              f"trace -> {trace_path}")
         print(f"DVFS replay ({full.name} on {chip.name}, tau={TAU}):")
         for name, row in energy["phases"].items():
             if row["steps"]:
@@ -485,6 +543,27 @@ def smoke(check: bool = True, tolerance: float = 0.10,
                 f"{name} {val:.3f} (floor {base[name] * (1 - tolerance):.3f})"
                 for name, val in vals[variant].items())
             print(f"bench-smoke OK [{variant}]: {anchors}")
+
+    # tracing overhead gate: the obs tracer must cost <= 1% tokens/sec
+    # on the hot path (retry-confirm with extra attempts — the ratio is
+    # a quotient of two noisy timings, and a genuine >1% cost keeps
+    # missing while a noise dip clears on re-measurement)
+    if "trace_overhead" in base:
+        ratio = trace_overhead_section()["trace_overhead"]
+        for attempt in range(confirm_retries + 2):
+            if ratio >= 0.99:
+                break
+            print(f"bench-smoke: trace_overhead {ratio:.3f} below 0.99; "
+                  f"re-confirming ({attempt + 1}/{confirm_retries + 2})")
+            ratio = max(ratio,
+                        trace_overhead_section()["trace_overhead"])
+        if ratio < 0.99:
+            ok = False
+            print(f"bench-smoke FAIL [trace_overhead]: {ratio:.3f} < "
+                  f"0.99 (tracing costs >1% tokens/sec)")
+        else:
+            print(f"bench-smoke OK [trace_overhead]: {ratio:.3f} "
+                  f"(floor 0.990)")
     print(f"bench-smoke: {tolerance:.0%} tolerance -> "
           f"{'OK' if ok else 'REGRESSION'}")
     return 0 if ok else 1

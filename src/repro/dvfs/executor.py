@@ -24,12 +24,14 @@ The legacy :class:`~repro.runtime.dvfs_exec.PhaseExecutor` /
 """
 from __future__ import annotations
 
+import copy
 from typing import Callable, Dict, Optional, Tuple
 
 from ..core.coalesce import SWITCH_POWER_W
 from ..core.freq import ClockPair
 from ..core.objectives import pct
 from ..core.power_model import Chip
+from ..obs import NULL_TRACER, MetricsRegistry, segment_breakdown
 from ..runtime.energy import (EnergyMeter, FrequencyController,
                               SimulatedController, StepEnergy)
 from .governors import BaseGovernor, StaticPlanGovernor
@@ -44,7 +46,8 @@ class GovernorExecutor:
     def __init__(self, governor: BaseGovernor, chip: Chip,
                  controller: Optional[object] = None,
                  measure_fn: Optional[
-                     Callable[[str], Tuple[float, float]]] = None):
+                     Callable[[str], Tuple[float, float]]] = None,
+                 tracer: Optional[object] = None):
         plan = governor.plan
         if plan is None:
             raise ValueError("governor has no plan to execute; plan first "
@@ -63,6 +66,14 @@ class GovernorExecutor:
             controller = make_controller(controller, chip)
         self.controller: FrequencyController = controller
         self.measure_fn = measure_fn
+        # tracing: modeled-time spans/instants on one track; the owner
+        # (replica, session) may retarget track/clock after construction
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_track = "dvfs"
+        #: modeled-clock source for span starts; when None the executor
+        #: accumulates its own busy-time axis in ``_trace_t``
+        self.clock_fn: Optional[Callable[[], float]] = None
+        self._trace_t = 0.0
         # accounting: one (meter, baseline twin) per segment name, plus a
         # carry accumulator that survives governor re-plans
         self.meters: Dict[str, EnergyMeter] = {}
@@ -86,6 +97,10 @@ class GovernorExecutor:
             "steps": 0, "time_s": 0.0, "energy_j": 0.0,
             "base_time_s": 0.0, "base_energy_j": 0.0,
             "internal_switches": 0})
+        if self.tracer.enabled:
+            self.tracer.note_segment(self.trace_track, seg.name,
+                                     self.governor.revision,
+                                     segment_breakdown(self.chip, seg))
 
     def _flush(self, name: str) -> None:
         """Fold the current meter's books into the carry accumulator (a
@@ -104,12 +119,36 @@ class GovernorExecutor:
         self.meters[name].records.clear()
         self.baseline[name].records.clear()
 
+    def _trace_now(self) -> float:
+        """Current modeled time for trace emission: the owner's clock
+        when wired (replica tier), else the accumulated busy axis."""
+        return self.clock_fn() if self.clock_fn is not None \
+            else self._trace_t
+
+    def note_segments(self) -> None:
+        """(Re-)stash every mounted segment's planned-vs-auto breakdown
+        under the *current* trace track — called by owners that retarget
+        ``trace_track`` after construction (replicas)."""
+        if not self.tracer.enabled:
+            return
+        for name in self.meters:
+            seg = self.governor.segment(name)
+            self.tracer.note_segment(self.trace_track, name,
+                                     self._revision.get(name, 1),
+                                     segment_breakdown(self.chip, seg))
+
     def _segment(self, name: str) -> PlanSegment:
         seg = self.governor.segment(name)
         if self._revision.get(name) != self.governor.revision:
             # governor re-planned since we last metered this segment
             if name in self.meters:
                 self._flush(name)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    self.trace_track, "replan", self._trace_now(),
+                    cat="replan",
+                    args={"segment": name,
+                          "revision": self.governor.revision})
             self._mount(seg)
         return seg
 
@@ -131,8 +170,8 @@ class GovernorExecutor:
             self.controller.set_clocks(ClockPair(entry.mem, entry.core))
             if advance is not None:
                 advance(entry.expected_time_s * frac)
-        self.switches[name] += getattr(self.controller, "n_switches",
-                                       sw0) - sw0
+        dsw = getattr(self.controller, "n_switches", sw0) - sw0
+        self.switches[name] += dsw
         step = self._steps[name]
         rec = self.meters[name].on_step(step)
         self.baseline[name].on_step(step)
@@ -149,6 +188,21 @@ class GovernorExecutor:
                     step=r.step, time_s=r.time_s * frac,
                     energy_j=r.energy_j * frac, n_switches=r.n_switches)
             rec = self.meters[name].records[-1]
+        tr = self.tracer
+        if tr.enabled:
+            t0 = self._trace_now()
+            args = {"scope": seg.scope, "energy_j": rec.energy_j,
+                    "planned_time_s": seg.time_s,
+                    "planned_energy_j": seg.energy_j,
+                    "rev": self._revision.get(name, 1)}
+            if frac != 1.0:
+                args["frac"] = frac
+            tr.span(self.trace_track, name, t0, rec.time_s, cat="phase",
+                    args=args)
+            if dsw:
+                tr.instant(self.trace_track, "freq-switch", t0,
+                           cat="freq", args={"n": dsw})
+            self._trace_t = t0 + rec.time_s
         return rec
 
     # -- lifecycle --------------------------------------------------------
@@ -220,12 +274,60 @@ class GovernorExecutor:
         if getattr(self.controller, "n_giveups", 0):
             out["n_giveups"] = self.controller.n_giveups
         if getattr(self.controller, "controller_events", None):
+            # deep copies: the payloads are live controller/governor
+            # state — callers mutating a summary must not reach back
+            # into the event books
             out["controller_events"] = \
-                list(self.controller.controller_events)
+                copy.deepcopy(list(self.controller.controller_events))
         if self.governor.revision > 1:
             out["governor_revision"] = self.governor.revision
-            out["governor_events"] = list(self.governor.events)
+            out["governor_events"] = \
+                copy.deepcopy(list(self.governor.events))
         return out
+
+    def ledger_rows(self) -> Dict[str, Dict[str, float]]:
+        """Kernel-tier ledger: each segment's charge split into its three
+        sources — the live meter, the carry flushed by re-plans, and the
+        phase-boundary switch surcharge.  The split uses exactly the
+        :meth:`summary` arithmetic, so
+        ``metered + carry + boundary == summary()`` is the conservation
+        invariant :func:`repro.obs.check_executor` asserts."""
+        rows: Dict[str, Dict[str, float]] = {}
+        for name in self.meters:
+            m = self.meters[name].totals()
+            c = self._carry[name]
+            sched = self.meters[name].schedule
+            internal = (sched.n_switches if sched is not None else 0) \
+                * int(m["steps"]) + int(c["internal_switches"])
+            extra = max(self.switches[name] - internal, 0)
+            rows[name] = {
+                "steps": int(m["steps"]) + int(c["steps"]),
+                "metered_time_s": m["time_s"],
+                "metered_j": m["energy_j"],
+                "carry_time_s": c["time_s"],
+                "carry_j": c["energy_j"],
+                "boundary_switch_s": extra * self.chip.switch_latency_s,
+                "boundary_switch_j": (extra * self.chip.switch_latency_s
+                                      * SWITCH_POWER_W),
+            }
+        return rows
+
+    def metrics(self, registry: Optional[MetricsRegistry] = None
+                ) -> MetricsRegistry:
+        """Adapter: the executed books as typed registry instruments
+        (``summary()`` itself stays the wire format)."""
+        reg = registry if registry is not None else MetricsRegistry()
+        summ = self.summary()
+        for name, row in summ["phases"].items():
+            reg.counter("segment_steps", segment=name).inc(row["steps"])
+            reg.counter("segment_time_s",
+                        segment=name).inc(row["time_s"])
+            reg.counter("segment_energy_j",
+                        segment=name).inc(row["energy_j"])
+            reg.counter("segment_switches",
+                        segment=name).inc(row["n_switches"])
+        reg.gauge("governor_revision").set(self.governor.revision)
+        return reg
 
 
 class ServeGovernorExecutor(GovernorExecutor):

@@ -52,6 +52,7 @@ class DvfsSession:
                  tau: Optional[float] = None,
                  governor: Union[str, BaseGovernor] = "kernel-static",
                  controller: Optional[Union[str, object]] = None,
+                 tracer: Optional[object] = None,
                  seed: int = 0, n_reps: int = 5, **governor_kwargs):
         if policy is not None and tau is not None:
             raise ValueError("pass policy= or tau=, not both")
@@ -80,6 +81,7 @@ class DvfsSession:
                 and hasattr(self.governor, "table_provider"):
             self.governor.chip = self.chip
         self.controller = controller        # resolved by the executor
+        self.tracer = tracer                # threaded into executors
         self.seed = seed
         self.n_reps = n_reps
         self.planner_wall_s = 0.0
@@ -212,6 +214,7 @@ class DvfsSession:
     # -- govern / meter --------------------------------------------------
     def serve_executor(self, **kw) -> ServeGovernorExecutor:
         """Engine-facing executor over this session's governor + plan."""
+        kw.setdefault("tracer", self.tracer)
         ex = ServeGovernorExecutor(self.governor, self.chip,
                                    self.controller, **kw)
         self._executors.append(ex)
@@ -219,12 +222,14 @@ class DvfsSession:
 
     def train_executor(self, **kw) -> TrainGovernorExecutor:
         """Trainer-facing executor over this session's governor + plan."""
+        kw.setdefault("tracer", self.tracer)
         ex = TrainGovernorExecutor(self.governor, self.chip,
                                    self.controller, **kw)
         self._executors.append(ex)
         return ex
 
     def executor(self, **kw) -> GovernorExecutor:
+        kw.setdefault("tracer", self.tracer)
         ex = GovernorExecutor(self.governor, self.chip, self.controller,
                               **kw)
         self._executors.append(ex)

@@ -35,6 +35,7 @@ from ..dvfs.session import DvfsSession
 from .faults import (FaultInjector, FaultSchedule, apply_thermal_cap,
                      lift_thermal_cap)
 from .governor import FleetGovernor
+from ..obs import NULL_TRACER, from_controller_events, from_recovery_books
 from .metering import (LOADED_UTIL_MIN, TransferCostModel, fleet_report,
                        kv_bytes_per_token)
 from .replica import (ACTIVE, DEAD, DECODE, PREFILL, Replica,
@@ -90,7 +91,8 @@ class Fleet:
                  recover: bool = True,
                  heartbeat_timeout_s: float = 0.02,
                  migration_max_retries: int = 3,
-                 migration_backoff_s: float = 2e-3):
+                 migration_backoff_s: float = 2e-3,
+                 tracer: Optional[object] = None):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         names = [r.name for r in replicas]
@@ -107,6 +109,13 @@ class Fleet:
                              "unified replicas")
         self.router = make_router(router) if isinstance(router, str) \
             else router
+        # tracing: fleet-level events (migrations, faults, power, cap
+        # ticks) on their own tracks; inherits the replicas' tracer when
+        # none is given so one Tracer covers every tier of the run
+        self.tracer = tracer if tracer is not None else next(
+            (r.tracer for r in self.replicas if r.tracer.enabled),
+            NULL_TRACER)
+        self._n_transfers = 0
         self.governor = governor
         self.autopark_idle_s = autopark_idle_s
         #: power-window cadence when no governor drives it (keep equal
@@ -190,6 +199,10 @@ class Fleet:
     def _tick(self, now: float) -> None:
         win = self._window(now)
         self.power_series.append(win)
+        if self.tracer.enabled:
+            self.tracer.counter("fleet", "cluster_power_w", now,
+                                {"power_w": win["power_w"]},
+                                cat="power")
         if self.governor is not None:
             self.governor.control(self.replicas, now_s=now,
                                   measured_w=win["power_w"],
@@ -213,6 +226,12 @@ class Fleet:
             rs.link_attempts += 1
             # the failed attempt still drove the link
             self.recovery["link_retry_energy_j"] += cost["energy_j"]
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "migrations", "link-drop", start_s, cat="fault",
+                    args={"uid": rs.req.uid,
+                          "attempt": rs.link_attempts,
+                          "energy_j": cost["energy_j"]})
             if rs.link_attempts > self.migration_max_retries:
                 self.recovery["n_link_fallbacks"] += 1
                 rs.needs_reprefill = True
@@ -234,6 +253,17 @@ class Fleet:
                     "energy_j": cost["energy_j"] * factor}
         self.migrations.append(cost)
         rs.migrate_ready_s = start_s + cost["time_s"]
+        if self.tracer.enabled:
+            # async span: in-flight transfers overlap, so they pair by
+            # correlation id instead of B/E nesting
+            self._n_transfers += 1
+            self.tracer.aspan(
+                "migrations", f"migrate:{rs.req.uid}", start_s,
+                cost["time_s"], id=f"{rs.req.uid}:{self._n_transfers}",
+                cat="migration",
+                args={"bytes": cost["bytes"],
+                      "energy_j": cost["energy_j"],
+                      "degraded": state == "degrade"})
         self._pending.append(rs)
 
     def _drain_outboxes(self) -> None:
@@ -321,6 +351,12 @@ class Fleet:
                 return
             self.recovery["n_crashes"] += 1
             self._orphans[r.name] = r.fail(now)
+            # the crash snapshot fail() took before flushing the radix
+            # tree — the at-crash cache/pool books would otherwise be
+            # silently lost with the replica
+            if r.crash_stats is not None:
+                self.recovery.setdefault("crash_books", {})[r.name] = \
+                    r.crash_stats
             if self.governor is not None:
                 self.governor.invalidate(r.name)
         elif action == "thermal-cap":
@@ -345,12 +381,12 @@ class Fleet:
             if ctl is not None and hasattr(ctl, "inject_failure"):
                 self.recovery["n_driver_faults"] += 1
                 ctl.inject_failure(ev.dwell_s)
-                r.events.append({"t": now, "event": "driver-fail",
-                                 "dwell_s": ev.dwell_s})
+                r._event({"t": now, "event": "driver-fail",
+                          "dwell_s": ev.dwell_s}, cat="fault")
             else:
-                r.events.append({"t": now, "event": "driver-fail-skipped",
-                                 "why": "controller cannot fail "
-                                        "(simulated backend)"})
+                r._event({"t": now, "event": "driver-fail-skipped",
+                          "why": "controller cannot fail "
+                                 "(simulated backend)"}, cat="fault")
 
     def _detect(self, r: Replica, orphans: Dict, now: float) -> None:
         """Heartbeat expired: evict the dead replica and re-dispatch its
@@ -360,7 +396,7 @@ class Fleet:
         (mid-decode slots, unsent outbox, dead prefiller) re-runs its
         prefill on the decode side with its token budget resumed."""
         self.recovery["n_evicted"] += 1
-        r.events.append({"t": now, "event": "evicted"})
+        r._event({"t": now, "event": "evicted"}, cat="fault")
         if not self.recover:
             for bucket in ("queued", "slots", "outbox"):
                 self._stranded.extend(orphans[bucket])
@@ -416,6 +452,7 @@ class Fleet:
                   or max(trace.duration_s / 16.0, 1e-3))
         states = [RequestState(req=q) for q in trace.requests]
         if self.governor is not None:
+            self.governor.tracer = self.tracer
             # pre-control: cap the initial plans before the first window
             # (otherwise the ramp-in window runs uncapped and overshoots)
             self.governor.control(self.replicas, now_s=0.0)
@@ -480,6 +517,20 @@ class Fleet:
         report["disaggregated"] = self.disaggregated
         if self.governor is not None:
             report["fleet_governor"] = self.governor.summary()
+        if self.tracer.enabled:
+            # fold the remaining legacy streams onto the schema: driver/
+            # freq records live in each controller's own busy-time axis
+            # (the replica spans already cover phases live), and the
+            # recovery books close the trace at the horizon
+            for r in self.replicas:
+                evs = getattr(r.executor.controller,
+                              "controller_events", None)
+                if evs:
+                    self.tracer.extend(
+                        from_controller_events(evs, track=r.name))
+            if self.injector is not None:
+                self.tracer.extend(from_recovery_books(
+                    report["recovery"], track="fleet", ts=horizon))
         return report
 
 
@@ -508,7 +559,8 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
                   controller: Optional[str] = None,
                   prefix_cache: bool = False,
                   pool_pages: Optional[int] = None,
-                  cache_seed: int = 0) -> Replica:
+                  cache_seed: int = 0,
+                  tracer: Optional[object] = None) -> Replica:
     """One replica from a template plan + shared decode tables."""
     if spec.role == PREFILL:
         # a prefill-only plan has no decode segments to re-plan; give the
@@ -524,7 +576,8 @@ def build_replica(name: str, spec: ReplicaSpec, plan: DvfsPlan,
                    prefill_table=prefill_table,
                    n_pages=pool_pages,
                    prefix_cache=prefix_cache,
-                   cache_seed=cache_seed)
+                   cache_seed=cache_seed,
+                   tracer=tracer)
 
 
 def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
@@ -544,7 +597,8 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                 recover: bool = True,
                 heartbeat_timeout_s: float = 0.02,
                 prefix_cache: bool = False,
-                pool_pages: Optional[int] = None) -> Fleet:
+                pool_pages: Optional[int] = None,
+                tracer: Optional[object] = None) -> Fleet:
     """Plan once per distinct spec, instantiate one replica per entry.
 
     With ``transfer_from`` (a chip name appearing in ``specs``), every
@@ -620,7 +674,8 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
             controller=controller,
             prefix_cache=prefix_cache,
             pool_pages=pool_pages,
-            cache_seed=seed + i))
+            cache_seed=seed + i,
+            tracer=tracer))
     gov = fleet_governor
     if gov is None and power_cap_w is not None:
         gov = FleetGovernor(power_cap_w, interval_s=cap_interval_s)
@@ -630,7 +685,8 @@ def build_fleet(specs: Sequence[ReplicaSpec], cfg: ModelConfig, *,
                  transfer_cost=transfer_cost,
                  kv_token_bytes=kv_bytes_per_token(cfg, kv_dtype),
                  faults=faults, recover=recover,
-                 heartbeat_timeout_s=heartbeat_timeout_s)
+                 heartbeat_timeout_s=heartbeat_timeout_s,
+                 tracer=tracer)
 
 
 def parse_replica_specs(text: str) -> List[ReplicaSpec]:

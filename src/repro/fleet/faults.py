@@ -366,8 +366,8 @@ def apply_thermal_cap(replica, max_core_frac: float) -> None:
     replica._thermal_saved = saved
     _replan_clamped(replica,
                     [f"thermal-cap:frac={float(max_core_frac):.2f}"])
-    replica.events.append({"t": replica.clock, "event": "thermal-cap",
-                           "max_core_frac": float(max_core_frac)})
+    replica._event({"t": replica.clock, "event": "thermal-cap",
+                    "max_core_frac": float(max_core_frac)}, cat="fault")
 
 
 def lift_thermal_cap(replica) -> None:
@@ -383,4 +383,5 @@ def lift_thermal_cap(replica) -> None:
     replica.thermal_cap = None
     replica._thermal_saved = None
     _replan_clamped(replica, ["thermal-lift"])
-    replica.events.append({"t": replica.clock, "event": "thermal-lift"})
+    replica._event({"t": replica.clock, "event": "thermal-lift"},
+                   cat="fault")

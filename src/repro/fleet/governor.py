@@ -41,6 +41,7 @@ from ..core.objectives import WastePolicy
 from ..core.phase_plan import compile_phase
 from ..dvfs.governors import OnlineGovernor, plan_decode_joint
 from ..dvfs.plan_ir import PlanSegment
+from ..obs import NULL_TRACER
 from .metering import LOADED_UTIL_MIN
 from .replica import DEAD, PARKED, Replica
 
@@ -80,6 +81,9 @@ class FleetGovernor:
         self.tau_sweep = tuple(tau_sweep)
         self.allow_park = allow_park
         self.events: List[Dict] = []
+        #: trace sink for cap-tick instants (the fleet loop retargets
+        #: this to its own tracer before serving)
+        self.tracer = NULL_TRACER
         self.n_replans = 0
         # frontier cache: replica -> (phase-weight shares, points); a
         # material shift of the observed shares rebuilds the frontier
@@ -291,6 +295,13 @@ class FleetGovernor:
         self._applied[r.name] = pt.tau
         self.n_replans += 1
 
+    def _trace_tick(self, event: Dict) -> None:
+        if self.tracer.enabled:
+            name = "cap-hold" if event.get("hold") else "cap-tick"
+            self.tracer.instant(
+                "fleet", name, event["t"], cat="replan",
+                args={k: v for k, v in event.items() if k != "t"})
+
     # -- control loop -----------------------------------------------------
     def control(self, replicas: Sequence[Replica], *, now_s: float,
                 measured_w: Optional[float] = None,
@@ -313,6 +324,7 @@ class FleetGovernor:
                          "measured_w": measured_w, "lambda": None,
                          "feasible": True, "pushed": [], "hold": True}
                 self.events.append(event)
+                self._trace_tick(event)
                 return event
         sol = self.solve(replicas, util,
                          cap_w=self.power_cap_w - self._bias_w)
@@ -338,6 +350,7 @@ class FleetGovernor:
                  "measured_w": measured_w, "lambda": sol["lambda"],
                  "feasible": sol["feasible"], "pushed": pushed}
         self.events.append(event)
+        self._trace_tick(event)
         return event
 
     def summary(self) -> Dict:

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import MetricsRegistry
 from .replica import Replica, RequestState
 
 #: a window is "loaded" when every replica spent at least this fraction
@@ -79,14 +80,30 @@ def _pcts(vals: Sequence[float], ps=(50, 99)) -> Dict[str, float]:
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
-def latency_stats(requests: Sequence[RequestState]) -> Dict:
-    """p50/p99 TTFT and TPOT over the completed request set."""
+def latency_stats(requests: Sequence[RequestState],
+                  registry: Optional[MetricsRegistry] = None) -> Dict:
+    """p50/p99 TTFT and TPOT over the completed request set.
+
+    Routed through :class:`~repro.obs.MetricsRegistry` histograms (whose
+    percentile computation is the exact ``_pcts`` arithmetic), so the
+    output dict is byte-identical to the legacy builder while the
+    samples become inspectable instruments.  Pass ``registry`` to
+    accumulate into a caller-owned registry.
+    """
+    reg = registry if registry is not None else MetricsRegistry()
+    h_ttft = reg.histogram("ttft_s")
+    h_tpot = reg.histogram("tpot_s")
     done = [rs for rs in requests if rs.done]
-    ttft = [rs.ttft_s for rs in done if rs.ttft_s is not None]
-    tpot = [rs.tpot_s for rs in done if rs.tpot_s is not None]
+    for rs in done:
+        if rs.ttft_s is not None:
+            h_ttft.observe(rs.ttft_s)
+        if rs.tpot_s is not None:
+            h_tpot.observe(rs.tpot_s)
     out = {"n_completed": len(done)}
-    out.update({f"ttft_{k}_s": v for k, v in _pcts(ttft).items()})
-    out.update({f"tpot_{k}_s": v for k, v in _pcts(tpot).items()})
+    out.update({f"ttft_{k}_s": v for k, v in
+                h_ttft.percentiles().items()})
+    out.update({f"tpot_{k}_s": v for k, v in
+                h_tpot.percentiles().items()})
     return out
 
 
@@ -115,13 +132,27 @@ def power_stats(series: Sequence[Dict],
     return out
 
 
-def migration_stats(migrations: Sequence[Dict]) -> Dict:
-    """Aggregate the per-transfer cost records the fleet loop charged."""
-    return {"n_migrations": len(migrations),
-            "migration_bytes": int(sum(m["bytes"] for m in migrations)),
-            "migration_s": float(sum(m["time_s"] for m in migrations)),
-            "migration_energy_j": float(sum(m["energy_j"]
-                                            for m in migrations))}
+def migration_stats(migrations: Sequence[Dict],
+                    registry: Optional[MetricsRegistry] = None) -> Dict:
+    """Aggregate the per-transfer cost records the fleet loop charged.
+
+    Counter-backed (same registry-adapter pattern as
+    :func:`latency_stats`); output keys and value types are unchanged.
+    """
+    reg = registry if registry is not None else MetricsRegistry()
+    c_n = reg.counter("migrations")
+    c_bytes = reg.counter("migration_bytes")
+    c_s = reg.counter("migration_s")
+    c_j = reg.counter("migration_energy_j")
+    for m in migrations:
+        c_n.inc(1)
+        c_bytes.inc(m["bytes"])
+        c_s.inc(m["time_s"])
+        c_j.inc(m["energy_j"])
+    return {"n_migrations": int(c_n.value),
+            "migration_bytes": int(c_bytes.value),
+            "migration_s": float(c_s.value),
+            "migration_energy_j": float(c_j.value)}
 
 
 def fleet_report(replicas: Sequence[Replica],

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ..cache import RadixCache
 from ..dvfs.session import DvfsSession
+from ..obs import NULL_TRACER
 from ..serve.kv_pages import PagePool
 from ..serve.scheduler import Scheduler
 from .traces import TraceRequest
@@ -146,7 +147,8 @@ class Replica:
                  pool_max_seq: int = 512,
                  n_pages: Optional[int] = None,
                  prefix_cache: bool = False,
-                 cache_seed: int = 0):
+                 cache_seed: int = 0,
+                 tracer: Optional[object] = None):
         plan = session.governor.plan
         if plan is None or plan.kind != "serve":
             raise ValueError(f"replica {name!r} needs a session holding "
@@ -158,6 +160,15 @@ class Replica:
         self.session = session
         self.chip = session.chip
         self.executor = session.serve_executor()
+        # tracing: one track per replica, spans on the replica's modeled
+        # clock.  The executor emits the phase spans/replan instants; the
+        # replica emits lifecycle/fault/cache instants through _event.
+        self.tracer = tracer if tracer is not None \
+            else getattr(self.executor, "tracer", NULL_TRACER)
+        self.executor.tracer = self.tracer
+        self.executor.trace_track = name
+        self.executor.clock_fn = lambda: self.clock
+        self.executor.note_segments()
         self.scheduler = Scheduler(n_slots)
         self.n_slots = n_slots
         #: phase role, stamped into the plan by derive_role_plan
@@ -204,6 +215,10 @@ class Replica:
         #: prefill measurement table (fleet governor's second cap lever)
         self.prefill_table = prefill_table
         self.events: List[Dict] = []
+        #: at-crash cache/pool books, snapshotted by fail() before the
+        #: flush destroys them; the fleet folds these into its recovery
+        #: books so crash stats are not silently lost
+        self.crash_stats: Optional[Dict] = None
 
     # -- plan access ------------------------------------------------------
     @property
@@ -284,13 +299,24 @@ class Replica:
                 wait += rem[k] * per_step
         return wait
 
+    def _event(self, rec: Dict, cat: str = "lifecycle") -> None:
+        """Append a legacy event record and mirror it onto the trace as
+        an instant on this replica's track (same ``t``/payload)."""
+        self.events.append(rec)
+        if self.tracer.enabled:
+            args = {k: v for k, v in rec.items()
+                    if k not in ("t", "event")}
+            self.tracer.instant(self.name, str(rec.get("event")),
+                                float(rec.get("t", self.clock)), cat=cat,
+                                args=args or None)
+
     # -- lifecycle --------------------------------------------------------
     def drain(self) -> None:
         """Stop accepting routes; queued + in-flight work still finishes,
         then the replica parks itself."""
         if self.state == ACTIVE:
             self.state = DRAINING
-            self.events.append({"t": self.clock, "event": "drain"})
+            self._event({"t": self.clock, "event": "drain"})
 
     def preempt_drain(self) -> None:
         """Priority preemption: an ``interactive``-class request may pull
@@ -299,7 +325,7 @@ class Replica:
         clocks, so resuming costs nothing."""
         if self.state == DRAINING:
             self.state = ACTIVE
-            self.events.append({"t": self.clock, "event": "preempt_drain"})
+            self._event({"t": self.clock, "event": "preempt_drain"})
 
     def park(self) -> None:
         """Enter the deepest frequency state.  Only an empty replica can
@@ -309,7 +335,7 @@ class Replica:
                                f"queued work; drain before parking")
         if self.state != PARKED:
             self.state = PARKED
-            self.events.append({"t": self.clock, "event": "park"})
+            self._event({"t": self.clock, "event": "park"})
 
     def unpark(self) -> None:
         """Ramp back to serving clocks; the wake latency is charged as
@@ -319,7 +345,7 @@ class Replica:
             self.clock += self.wake_latency_s
             self.n_wakes += 1
             self.state = ACTIVE
-            self.events.append({"t": self.clock, "event": "unpark"})
+            self._event({"t": self.clock, "event": "unpark"})
 
     def fail(self, now: float) -> Dict[str, List[RequestState]]:
         """Crash at ``now``: orphan every queued / in-flight / outbound
@@ -327,6 +353,12 @@ class Replica:
         (each request in exactly one bucket — exactly-once recovery
         starts from this partition); the fleet re-dispatches them once
         the heartbeat timeout detects the death."""
+        # snapshot the cache/pool books FIRST: _vacate empties the pool
+        # and the radix flush zeroes the tree, so the at-crash stats the
+        # recovery books fold in must be taken before either
+        self.crash_stats = {"pool": self.pool.stats()}
+        if self.prefix_cache is not None:
+            self.crash_stats["prefix_cache"] = self.prefix_cache.stats()
         orphans: Dict[str, List[RequestState]] = {
             "queued": [], "slots": [], "outbox": list(self.outbox)}
         self.outbox.clear()
@@ -346,8 +378,8 @@ class Replica:
         self.state = DEAD
         self.dead_since = now
         stranded = sum(len(v) for v in orphans.values())
-        self.events.append({"t": now, "event": "crash",
-                            "orphaned": stranded})
+        self._event({"t": now, "event": "crash",
+                     "orphaned": stranded}, cat="fault")
         return orphans
 
     # -- work -------------------------------------------------------------
@@ -423,6 +455,13 @@ class Replica:
         if tail is not None:
             pool.cow(slot, len(shared))
         rs.cached_tokens = matched + (tail[1] if tail is not None else 0)
+        if rs.cached_tokens and self.tracer.enabled:
+            self.tracer.instant(
+                self.name, "cache-hit", self.clock, cat="cache",
+                args={"uid": rs.req.uid,
+                      "cached_tokens": rs.cached_tokens,
+                      "prompt_len": rs.req.prompt_len,
+                      "cow": tail is not None})
         return True
 
     def _insert_prompt(self, slot: int, rs: RequestState) -> None:

@@ -29,6 +29,7 @@ from ..configs import get_config
 from ..fleet import (FaultInjector, FaultSchedule, FleetGovernor,
                      build_fleet, generate_faults, generate_tenant_trace,
                      generate_trace, parse_replica_specs, router)
+from ..obs import Tracer
 
 
 def main():
@@ -80,6 +81,9 @@ def main():
                          "open-loop trace")
     ap.add_argument("--save-trace", default=None,
                     help="write the generated trace JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="record a Chrome/Perfetto-loadable telemetry "
+                         "trace (repro.obs schema) of the run here")
     ap.add_argument("--json", action="store_true",
                     help="dump the full report as JSON")
     args = ap.parse_args()
@@ -99,13 +103,18 @@ def main():
     rt = router(args.router, slo_ttft_s=args.slo_ttft) \
         if args.router in ("energy-slo", "cache-affinity") else args.router
     gov = FleetGovernor(args.power_cap) if args.power_cap else None
+    tracer = None
+    if args.trace_out:
+        tracer = Tracer(meta={"launcher": "fleet", "arch": args.arch,
+                              "replicas": args.replicas,
+                              "router": args.router, "seed": args.seed})
     fleet = build_fleet(specs, cfg, router=rt, fleet_governor=gov,
                         autopark_idle_s=args.autopark,
                         transfer_from=args.transfer_from,
                         seed=args.seed, controller=args.controller,
                         recover=not args.no_recover,
                         prefix_cache=args.prefix_cache,
-                        pool_pages=args.pool_pages)
+                        pool_pages=args.pool_pages, tracer=tracer)
     if args.faults:
         # schedules are built against the fleet's replica names, so the
         # injector is attached after the replicas exist
@@ -118,6 +127,9 @@ def main():
                 duration_s=trace.duration_s)
         fleet.injector = FaultInjector(sched)
     rep = fleet.serve(trace)
+    if tracer is not None:
+        print(f"[fleet] telemetry trace ({len(tracer.events)} events) "
+              f"-> {tracer.save(args.trace_out)}")
 
     if args.json:
         print(json.dumps(rep, indent=1, default=float))

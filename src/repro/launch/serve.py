@@ -18,6 +18,7 @@ from ..configs import get_config, smoke_config
 from ..configs.base import ShapeConfig
 from ..dvfs import DvfsSession
 from ..models import build_model
+from ..obs import Tracer
 from ..serve import Request, ServeEngine
 
 
@@ -32,7 +33,14 @@ def main():
     ap.add_argument("--governor", default="kernel-static",
                     help="repro.dvfs governor registry name")
     ap.add_argument("--tau", type=float, default=0.005)
+    ap.add_argument("--trace-out", default=None,
+                    help="record a Chrome/Perfetto-loadable telemetry "
+                         "trace (repro.obs schema) of the run here")
     args = ap.parse_args()
+    tracer = Tracer(meta={"launcher": "serve", "arch": args.arch,
+                          "chip": args.chip,
+                          "governor": args.governor}) \
+        if args.trace_out else None
 
     cfg = smoke_config(get_config(args.arch)) if args.smoke \
         else get_config(args.arch)
@@ -47,7 +55,7 @@ def main():
     dec = ShapeConfig(name="serve_decode", seq_len=512,
                       global_batch=args.slots, kind="decode")
     with DvfsSession(chip=args.chip, tau=args.tau,
-                     governor=args.governor) as sess:
+                     governor=args.governor, tracer=tracer) as sess:
         plan = sess.plan_serve(full, n_slots=args.slots,
                                prefill_shape=pre, decode_shape=dec)
         for name, row in plan.summary()["phases"].items():
@@ -59,7 +67,8 @@ def main():
         model = build_model(cfg, block_k=64)
         params = model.init(jax.random.PRNGKey(0))
         engine = ServeEngine(model, params, batch_slots=args.slots,
-                             max_seq=128, executor=sess.serve_executor())
+                             max_seq=128, executor=sess.serve_executor(),
+                             tracer=tracer)
         rng = np.random.default_rng(0)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab_size,
@@ -73,6 +82,9 @@ def main():
         print(f"[serve] {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok/dt:.1f} tok/s on this host)")
         tot = sess.report()["executed"][0]["totals"]
+    if tracer is not None:
+        print(f"[serve] telemetry trace ({len(tracer.events)} events) "
+              f"-> {tracer.save(args.trace_out)}")
     print(f"[serve] executed ({args.governor}): "
           f"{tot['energy_pct']:+.3f}% energy at {tot['time_pct']:+.4f}% "
           f"time vs auto ({tot['n_switches']} switches)")

@@ -18,6 +18,7 @@ from ..ckpt import CheckpointManager
 from ..data import DataPipeline
 from ..dvfs import DvfsSession
 from ..models import build_model
+from ..obs import Tracer
 from ..train import OptimizerConfig, make_train_step
 from ..train.loop import Trainer, TrainerConfig
 
@@ -47,6 +48,9 @@ def main():
                     default=None,
                     help="save the planned DvfsPlan JSON here")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--trace-out", default=None,
+                    help="record a Chrome/Perfetto-loadable telemetry "
+                         "trace (repro.obs schema) of the run here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -60,11 +64,16 @@ def main():
     # --- DVFS plan for this workload (campaign -> plan -> govern) ---
     session = None
     executor = None
+    tracer = Tracer(meta={"launcher": "train", "arch": cfg.name,
+                          "shape": shape.name, "chip": args.chip,
+                          "governor": args.governor}) \
+        if args.trace_out else None
     if args.dvfs != "off":
         tau = 0.0 if args.dvfs == "strict" else args.tau
         session = DvfsSession(chip=args.chip, tau=tau,
                               governor=args.governor,
-                              controller=args.controller)
+                              controller=args.controller,
+                              tracer=tracer)
         plan = session.plan_train(get_config(args.arch),
                                   shape=get_shape(args.shape))
         tot = plan.summary()["phases"]
@@ -98,6 +107,9 @@ def main():
         # run dies mid-step — a real driver must not stay pinned low
         if session is not None:
             session.close()
+    if tracer is not None:
+        print(f"[train] telemetry trace ({len(tracer.events)} events) "
+              f"-> {tracer.save(args.trace_out)}")
     print(f"[train] done: {json.dumps(out, default=float)}")
 
 

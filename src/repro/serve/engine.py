@@ -59,6 +59,7 @@ from .kv_pages import (PagedBatchState, cow_copy_block, scale_key,
 from .scheduler import Scheduler
 from ..cache import RadixCache, extras_namespace
 from ..models import common as cm
+from ..obs import NULL_TRACER
 
 
 @dataclass
@@ -111,9 +112,13 @@ class ServeEngine:
                  eos_token: Optional[int] = None, paged: bool = False,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, tracer=None):
         self.model = model
         self.params = params
+        # engine timeline is the jitted decode-step counter (modeled,
+        # deterministic); NullTracer keeps the hot path branch-cheap
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_track = "serve"
         self.slots = batch_slots
         self.max_seq = max_seq
         self.temperature = temperature
@@ -345,6 +350,12 @@ class ServeEngine:
         self._slot_shared[slot] = len(shared)
         if tail is not None:
             cow_copy_block(self.state, slot, len(shared))
+        if self.tracer.enabled and (shared or tail is not None):
+            self.tracer.instant(
+                self.trace_track, "prefix-hit",
+                float(self.n_decode_steps), cat="cache",
+                args={"uid": req.uid, "shared_pages": len(shared),
+                      "cow_tail": tail is not None, "slot": slot})
         return True
 
     def _admit(self) -> None:
@@ -443,6 +454,13 @@ class ServeEngine:
         if self.executor is not None:
             for _ in pairs:
                 self.executor.on_prefill()
+        if self.tracer.enabled:
+            for slot, req in pairs:
+                self.tracer.instant(
+                    self.trace_track, "admit",
+                    float(self.n_decode_steps), cat="lifecycle",
+                    args={"uid": req.uid, "slot": slot, "bucket": bucket,
+                          "prompt_len": len(req.prompt)})
         (first, self.state.cache, self.state.tokens, self.state.pos,
          self.state.remaining, self.rng) = \
             self._prefill_fn(bucket)(*args, **extras)
@@ -507,6 +525,12 @@ class ServeEngine:
             self.n_decode_steps += n
             bound -= n
             off += n
+        if self.tracer.enabled and off:
+            self.tracer.span(
+                self.trace_track, "decode-round",
+                float(self.n_decode_steps - off), float(off), cat="phase",
+                args={"steps": off, "chunks": len(chunks),
+                      "live": len(live)})
         self._sync(chunks)
 
     def _sync(self, chunks) -> None:

@@ -1,0 +1,537 @@
+"""Observability layer: trace schema + round-trip, Chrome derivation,
+NullTracer hot-path parity, metrics-adapter bit-identity, legacy-stream
+converters, and the cross-layer energy-conservation ledger (executor →
+replica → fleet, including faulted / migrating / prefix-cached runs).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import make_requests, small_fleet, small_trace, smoke_model
+from repro.configs import REGISTRY
+from repro.dvfs.plan_ir import DvfsPlan
+from repro.fleet import (Fleet, ReplicaSpec, build_fleet,
+                         build_replica, generate_faults,
+                         generate_tenant_trace, generate_trace,
+                         parse_replica_specs)
+from repro.fleet.metering import _pcts, latency_stats, migration_stats
+from repro.obs import (CATEGORIES, NULL_TRACER, OBS_SCHEMA_VERSION,
+                       EnergyLedger, MetricsRegistry, NullTracer, Tracer,
+                       check_executor, check_fleet, check_replica,
+                       fleet_ledger, from_controller_events,
+                       from_governor_events, from_recovery_books,
+                       from_replica_events, ingest_legacy_streams,
+                       make_event, segment_breakdown, validate_trace_dict)
+
+CFG = REGISTRY["llama3.2-1b"]
+
+
+def _sample_tracer() -> Tracer:
+    tr = Tracer(meta={"run": "unit", "chip": "tpu-v5e"})
+    tr.span("r0", "prefill", 0.0, 0.5, cat="phase",
+            args={"energy_j": 1.0})
+    tr.span("r0", "decode@4", 0.5, 0.25, cat="phase")
+    tr.instant("r0", "freq-switch", 0.5, cat="freq", args={"n": 2})
+    tr.aspan("migrations", "migrate:7", 0.1, 0.6, id="7:0",
+             cat="migration", args={"bytes": 4096})
+    tr.aspan("migrations", "migrate:8", 0.2, 0.6, id="8:1",
+             cat="migration")
+    tr.counter("fleet", "cluster_power_w", 1.0, {"power_w": 640.0})
+    tr.note_segment("r0", "prefill", 1, {"kernels": {}})
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# schema + validation
+# ---------------------------------------------------------------------------
+
+def test_make_event_minimal_keys():
+    ev = make_event("instant", "fault", "crash", "r0", 1.5)
+    assert ev == {"kind": "instant", "cat": "fault", "name": "crash",
+                  "track": "r0", "ts": 1.5}
+    ev = make_event("aspan", "migration", "m", "x", 0.0, dur=1.0, id=3,
+                    args={"a": 1})
+    assert ev["dur"] == 1.0 and ev["id"] == 3 and ev["args"] == {"a": 1}
+
+
+def test_validate_trace_dict_accepts_sample():
+    assert validate_trace_dict(_sample_tracer().to_dict()) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.update(obs_schema_version=99), "obs_schema_version"),
+    (lambda d: d["events"].append({"kind": "nope", "cat": "phase",
+                                   "name": "x", "track": "t", "ts": 0.0}),
+     "kind"),
+    (lambda d: d["events"].append({"kind": "span", "cat": "invalid",
+                                   "name": "x", "track": "t", "ts": 0.0,
+                                   "dur": 1.0}), "cat"),
+    (lambda d: d["events"].append({"kind": "span", "cat": "phase",
+                                   "name": "x", "track": "t",
+                                   "ts": 0.0}), "dur"),
+    (lambda d: d["events"].append({"kind": "aspan", "cat": "migration",
+                                   "name": "x", "track": "t", "ts": 0.0,
+                                   "dur": 1.0}), "id"),
+    (lambda d: d["events"].append({"kind": "instant", "cat": "fault",
+                                   "name": "x", "track": "t",
+                                   "ts": -1.0}), "ts"),
+    (lambda d: d["traceEvents"].append({"ph": "X", "ts": 0.0, "pid": "p",
+                                        "tid": "t", "name": "n"}), "ph"),
+    (lambda d: d["traceEvents"].insert(0, {"ph": "i", "ts": 9e12,
+                                           "pid": "p", "tid": "t",
+                                           "name": "n"}),
+     "non-decreasing"),
+])
+def test_validate_trace_dict_rejects(mutate, needle):
+    doc = _sample_tracer().to_dict()
+    mutate(doc)
+    errs = validate_trace_dict(doc)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_from_dict_raises_on_invalid():
+    with pytest.raises(ValueError, match="invalid trace"):
+        Tracer.from_dict({"obs_schema_version": 2, "events": []})
+
+
+# ---------------------------------------------------------------------------
+# round-trip + Chrome derivation
+# ---------------------------------------------------------------------------
+
+def test_trace_json_round_trip_bit_identity(tmp_path):
+    tr = _sample_tracer()
+    path = tr.save(str(tmp_path / "t.trace.json"))
+    tr2 = Tracer.load(path)
+    assert tr2.to_json() == tr.to_json()          # byte-identical
+    assert tr2.meta == tr.meta
+    assert tr2.events == tr.events
+
+
+def test_chrome_events_sane():
+    """Monotonic timestamps; every B closed by a matching E (per
+    pid/tid, LIFO); every async b paired with an e of the same id."""
+    chrome = _sample_tracer().chrome()
+    ts = [e["ts"] for e in chrome]
+    assert ts == sorted(ts)
+    stacks, open_async = {}, {}
+    for e in chrome:
+        key = (e["pid"], e["tid"])
+        if e["ph"] == "B":
+            stacks.setdefault(key, []).append(e["name"])
+        elif e["ph"] == "E":
+            assert stacks.get(key), f"E without B on {key}"
+            assert stacks[key].pop() == e["name"]
+        elif e["ph"] == "b":
+            open_async[e["id"]] = e["name"]
+        elif e["ph"] == "e":
+            assert open_async.pop(e["id"]) == e["name"]
+    assert all(not s for s in stacks.values())
+    assert not open_async
+
+
+def test_chrome_back_to_back_spans_close_before_open():
+    """At an equal timestamp the earlier span's E must sort before the
+    next span's B, or Perfetto nests them wrongly."""
+    tr = Tracer()
+    tr.span("t", "a", 0.0, 1.0)
+    tr.span("t", "b", 1.0, 1.0)
+    phs = [(e["ph"], e["name"]) for e in tr.chrome()]
+    assert phs == [("B", "a"), ("E", "a"), ("B", "b"), ("E", "b")]
+
+
+def test_null_tracer_is_inert():
+    nt = NullTracer()
+    assert not nt.enabled and not NULL_TRACER.enabled
+    nt.span("t", "x", 0.0, 1.0)
+    nt.instant("t", "x", 0.0)
+    nt.aspan("t", "x", 0.0, 1.0, id=1)
+    nt.counter("t", "x", 0.0, {})
+    nt.extend([{"kind": "span"}])
+    nt.note_segment("t", "x", 1, {})
+    assert nt.events == ()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + adapter bit-identity
+# ---------------------------------------------------------------------------
+
+def test_histogram_matches_pcts():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    vals = list(np.random.default_rng(3).normal(size=17))
+    for v in vals:
+        h.observe(v)
+    assert h.percentiles() == _pcts(vals)
+    empty = reg.histogram("none")
+    got, want = empty.percentiles(), _pcts([])
+    assert set(got) == set(want)
+    assert all(np.isnan(v) for v in got.values())
+
+
+def test_registry_get_or_create_and_kind_clash():
+    reg = MetricsRegistry()
+    c = reg.counter("x", phase="decode")
+    assert reg.counter("x", phase="decode") is c
+    assert reg.counter("x", phase="prefill") is not c
+    c.inc(2.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    reg.gauge("g").set(3.0)
+    with pytest.raises(TypeError):
+        reg.histogram("x", phase="decode")
+    snap = reg.snapshot()
+    assert snap["x{phase=decode}"] == {"kind": "counter", "value": 2.5}
+    assert len(reg) == 3
+
+
+def test_latency_stats_bit_identical_to_legacy():
+    class RS:
+        def __init__(self, done, ttft, tpot):
+            self.done, self.ttft_s, self.tpot_s = done, ttft, tpot
+
+    rng = np.random.default_rng(0)
+    reqs = [RS(True, float(rng.random()), float(rng.random()))
+            for _ in range(9)]
+    reqs += [RS(False, 1.0, 1.0), RS(True, None, None)]
+    done = [r for r in reqs if r.done]
+    legacy = {"n_completed": len(done)}
+    legacy.update({f"ttft_{k}_s": v for k, v in _pcts(
+        [r.ttft_s for r in done if r.ttft_s is not None]).items()})
+    legacy.update({f"tpot_{k}_s": v for k, v in _pcts(
+        [r.tpot_s for r in done if r.tpot_s is not None]).items()})
+    got = latency_stats(reqs)
+    assert got == legacy
+    assert json.dumps(got, sort_keys=True) == \
+        json.dumps(legacy, sort_keys=True)
+
+
+def test_migration_stats_bit_identical_to_legacy():
+    migs = [{"bytes": 4096, "time_s": 0.01, "energy_j": 0.2},
+            {"bytes": 100, "time_s": 0.002, "energy_j": 0.05}]
+    legacy = {"n_migrations": len(migs),
+              "migration_bytes": int(sum(m["bytes"] for m in migs)),
+              "migration_s": float(sum(m["time_s"] for m in migs)),
+              "migration_energy_j": float(sum(m["energy_j"]
+                                              for m in migs))}
+    got = migration_stats(migs)
+    assert got == legacy
+    assert [type(v) for v in got.values()] == \
+        [type(v) for v in legacy.values()]
+    assert migration_stats([]) == {"n_migrations": 0,
+                                   "migration_bytes": 0,
+                                   "migration_s": 0.0,
+                                   "migration_energy_j": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# converters
+# ---------------------------------------------------------------------------
+
+def test_legacy_stream_converters():
+    gov = from_governor_events([{"revision": 1, "reason": "adopt"},
+                                {"revision": 3, "reason": "mix"}], ts=2.0)
+    assert [e["name"] for e in gov] == ["adopt", "replan"]
+    assert all(e["cat"] == "replan" and e["ts"] == 2.0 for e in gov)
+
+    ctl = from_controller_events(
+        [{"t": 0.5, "event": "driver-fault", "window_s": 0.1},
+         {"t": 0.9, "event": "set-freq-deferred"}], track="r0")
+    assert ctl[0]["cat"] == "fault" and ctl[0]["ts"] == 0.5
+    assert ctl[0]["args"] == {"window_s": 0.1}
+    assert ctl[1]["cat"] == "freq"
+
+    rep = from_replica_events(
+        [{"t": 1.0, "event": "crash", "orphaned": 2},
+         {"t": 2.0, "event": "park"}], track="r1")
+    assert rep[0]["cat"] == "fault" and rep[1]["cat"] == "lifecycle"
+
+    rec = from_recovery_books(
+        {"n_crashes": 1, "link_retry_energy_j": 0.5,
+         "crash_books": {"r0": {"pool": {"allocated_pages": 0}}}},
+        ts=3.0)
+    assert rec[0]["kind"] == "counter"
+    assert rec[0]["args"]["n_crashes"] == 1
+    assert rec[1]["name"] == "crash_books"
+    assert rec[1]["args"]["replica"] == "r0"
+
+    tr = Tracer()
+    n = ingest_legacy_streams(
+        tr, governor_events=[{"revision": 2}],
+        controller_events=[{"t": 0.1, "event": "set-freq-ok"}],
+        replica_events=[{"t": 0.2, "event": "drain"}],
+        recovery={"n_crashes": 0}, track="x")
+    assert n == 4 and len(tr.events) == 4
+    assert validate_trace_dict(tr.to_dict()) == []
+    assert ingest_legacy_streams(NULL_TRACER,
+                                 governor_events=[{"revision": 2}]) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine parity: tracing on/off must not change outputs
+# ---------------------------------------------------------------------------
+
+def test_engine_outputs_identical_with_tracer_attached():
+    from repro.serve import Request, ServeEngine
+    model, params, cfg = smoke_model("llama3.2-1b")
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    def reqs():
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [base[:16 + 4 * (i % 3)],
+                             np.full(6, i, dtype=np.int32)]
+                        ).astype(np.int32),
+                        max_new_tokens=5) for i in range(6)]
+
+    def run(tracer):
+        eng = ServeEngine(model, params, batch_slots=2, max_seq=64,
+                          paged=True, page_size=16, prefix_cache=True,
+                          tracer=tracer)
+        out = [list(map(int, r.generated))
+               for r in eng.generate(reqs())]
+        return out, eng
+
+    plain, peng = run(None)
+    tr = Tracer()
+    traced, eng = run(tr)
+    assert traced == plain                        # bit-identical tokens
+    assert peng.prefix_cache_stats()["hits"] >= 4
+    kinds = {e["kind"] for e in tr.events}
+    names = {e["name"] for e in tr.events}
+    assert "span" in kinds and "decode-round" in names
+    assert "admit" in names
+    assert any(e["cat"] == "cache" for e in tr.events)   # prefix hits
+    assert validate_trace_dict(tr.to_dict()) == []
+
+
+# ---------------------------------------------------------------------------
+# executor summary isolation (deep-copied event payloads)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def templates():
+    """One planning run; each test rebuilds fresh replicas from it."""
+    fleet = small_fleet()
+    spec = ReplicaSpec(chip="tpu-v5e")
+    return [(r.name, spec, r.plan.to_json(),
+             dict(r.governor.tables or {}), r.prefill_table)
+            for r in fleet.replicas]
+
+
+def _fresh_replicas(templates, tracer=None, **kw):
+    return [build_replica(name, spec, DvfsPlan.from_json(pj), tabs,
+                          prefill_table=pt, tracer=tracer, **kw)
+            for name, spec, pj, tabs, pt in templates]
+
+
+def test_summary_payloads_are_deep_copied(templates):
+    r = _fresh_replicas(templates[:1])[0]
+    ex = r.executor
+    for _ in range(30):
+        ex.on_decode(4)
+    for _ in range(40):
+        ex.on_decode(1)              # drift -> online re-plan events
+    summ = ex.summary()
+    assert summ.get("governor_events"), "expected re-plan events"
+    before = json.dumps(ex.governor.events, sort_keys=True, default=str)
+    summ["governor_events"][0]["reason"] = "mutated-by-caller"
+    summ["governor_events"][0].setdefault("mix", {})["x"] = 1e9
+    assert json.dumps(ex.governor.events, sort_keys=True,
+                      default=str) == before
+    assert ex.summary()["governor_events"][0]["reason"] != \
+        "mutated-by-caller"
+
+
+def test_executor_trace_spans_and_ledger(templates):
+    tr = Tracer()
+    r = _fresh_replicas(templates[:1], tracer=tr)[0]
+    ex = r.executor
+    for _ in range(25):
+        ex.on_decode(4)
+    for _ in range(40):
+        ex.on_decode(1)              # drift -> re-plan instant
+    spans = [e for e in tr.events if e["kind"] == "span"
+             and e["cat"] == "phase"]
+    assert spans, "executed segments must emit phase spans"
+    for e in spans:
+        assert e["track"] == r.name
+        assert {"scope", "energy_j", "planned_time_s",
+                "planned_energy_j", "rev"} <= set(e["args"])
+    assert any(e["cat"] == "replan" for e in tr.events)
+    assert tr.meta["segments"], "mounts must stash kernel breakdowns"
+    assert check_executor(ex) == []
+    assert check_replica(r) == []
+
+
+def test_segment_breakdown_rows_sum_to_meter_integral(templates):
+    """The per-kernel rows must decompose exactly what the runtime
+    meter charges per iteration — same schedule walk, kept per-kernel
+    instead of summed — so waste attribution ties to the metered books
+    bit-for-bit, not to the planner's coalesced estimate."""
+    from repro.runtime.energy import EnergyMeter
+    r = _fresh_replicas(templates[:1])[0]
+    chip = r.session.chip
+    for seg in r.plan.segments:
+        br = segment_breakdown(chip, seg)
+        t = sum(row["t_plan"] for row in br["kernels"].values())
+        e = sum(row["e_plan"] for row in br["kernels"].values())
+        mt, me, msw = EnergyMeter(chip, seg.kernels,
+                                  schedule=seg.schedule)._integrate()
+        assert t == pytest.approx(mt, rel=1e-12)
+        assert e == pytest.approx(me, rel=1e-12)
+        assert br["kernels"].get("(clock-switch)", {"n": 0})["n"] == msw
+        assert br["planned_time_s"] == seg.time_s
+        assert br["planned_energy_j"] == seg.energy_j
+        # the stranded quantity exists: auto != plan somewhere
+        assert any(row["e_auto"] != row["e_plan"]
+                   for n, row in br["kernels"].items()
+                   if n != "(clock-switch)")
+
+
+# ---------------------------------------------------------------------------
+# fleet tracing + crash-stat preservation + ledger conservation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_faulted_run(templates):
+    """One faulted, traced fleet run shared by the assertion tests."""
+    tr = Tracer(meta={"run": "test"})
+    reps = _fresh_replicas(templates, tracer=tr, prefix_cache=True,
+                           controller="rate-limited")
+    names = [r.name for r in reps]
+    trace = small_trace(n=40, rate=90.0)
+    sched = generate_faults("storm", seed=1, replicas=names,
+                            duration_s=trace.duration_s)
+    fleet = Fleet(reps, router="round-robin", tracer=tr,
+                  faults=sched)
+    report = fleet.serve(trace)
+    return fleet, report, tr
+
+
+def test_crash_stats_survive_pool_flush(traced_faulted_run):
+    fleet, report, _ = traced_faulted_run
+    rec = report["recovery"]
+    assert rec["n_crashes"] >= 1
+    books = rec.get("crash_books")
+    assert books, "crash must snapshot pool/cache stats before flush"
+    for name, b in books.items():
+        assert "pool" in b and "allocated_pages" in b["pool"]
+        assert "prefix_cache" in b          # prefix_cache=True replicas
+        # the live pool was flushed on crash, but the book kept the
+        # at-crash view (the flush zeroes allocations)
+        r = next(x for x in fleet.replicas if x.name == name)
+        assert r.pool.stats()["allocated_pages"] == 0
+
+
+def test_fleet_trace_document(traced_faulted_run):
+    fleet, report, tr = traced_faulted_run
+    doc = tr.to_dict()
+    assert validate_trace_dict(doc) == []
+    cats = {e["cat"] for e in tr.events}
+    assert {"phase", "fault", "power"} <= cats
+    assert any(e["kind"] == "counter" and e["name"] == "cluster_power_w"
+               for e in tr.events)
+    # controller events were folded in per replica track
+    assert any(e["cat"] in ("freq", "fault")
+               and e["track"] in {r.name for r in fleet.replicas}
+               for e in tr.events if e["kind"] == "instant")
+    # recovery books ride at the horizon on the fleet track
+    assert any(e["name"] == "recovery_books" for e in tr.events)
+    # and the whole thing round-trips
+    assert Tracer.from_dict(json.loads(tr.to_json())).to_json() \
+        == tr.to_json()
+
+
+def test_ledger_conserves_on_faulted_run(traced_faulted_run):
+    fleet, report, _ = traced_faulted_run
+    assert check_fleet(fleet.replicas, report) == []
+    led = fleet_ledger(fleet.replicas, report)
+    by = led.by_layer()
+    assert set(by) <= {"kernel", "replica", "fleet"}
+    # ledger total == report total minus nothing: every charged joule
+    # is attributed (busy via kernel tier, dwell via replica tier,
+    # cluster charges via fleet tier)
+    assert led.total() == pytest.approx(report["energy_j"], rel=1e-6)
+
+
+def test_ledger_conservation_random_faults_across_seeds(templates):
+    """≥20 random fault schedules: the energy books must tie out at
+    every tier (executor rows -> summary -> replica book -> fleet
+    report) within 1e-6 on every run, with real fault activity across
+    the sweep."""
+    names = [t[0] for t in templates]
+    trace = small_trace(n=30, rate=90.0)
+    crashes = 0
+    for seed in range(22):
+        sched = generate_faults("random", seed=seed, replicas=names,
+                                protect=(names[0],),
+                                duration_s=trace.duration_s)
+        reps = _fresh_replicas(templates)
+        fleet = Fleet(reps, router="round-robin", faults=sched)
+        report = fleet.serve(trace)
+        assert check_fleet(fleet.replicas, report) == [], seed
+        crashes += report["recovery"]["n_crashes"]
+    assert crashes >= 3, "sweep never exercised crash recovery"
+
+
+def test_ledger_conserves_with_migrations():
+    """Disaggregated prefill/decode fleet: migration transfer energy is
+    charged at the fleet tier and the books still reconcile."""
+    specs = parse_replica_specs("tpu-v5e@prefill,2xtpu-v5e@decode")
+    fleet = build_fleet(specs, CFG, n_reps=3, router="energy-slo")
+    report = fleet.serve(generate_trace("poisson", n_requests=25,
+                                        rate_rps=80.0, seed=3))
+    assert report["n_migrations"] > 0
+    assert check_fleet(fleet.replicas, report) == []
+
+
+def test_ledger_conserves_with_prefix_cache_fractional_billing():
+    """Tenant trace with shared prefix templates: cache hits bill
+    fractional prefills (frac < 1) and the books must still tie out."""
+    fleet = small_fleet(prefix_cache=True, router="cache-affinity")
+    trace = generate_tenant_trace("poisson", n_requests=40,
+                                  rate_rps=100.0, seed=0, n_tenants=3)
+    report = fleet.serve(trace)
+    hits = sum(b["prefix_cache"]["hits"] for b in report["replicas"]
+               if "prefix_cache" in b)
+    assert hits > 0, "trace produced no cache hits; test is vacuous"
+    assert check_fleet(fleet.replicas, report) == []
+
+
+def test_energy_ledger_container():
+    led = EnergyLedger()
+    led.add("kernel", "decode", "decode@4", 1.5)
+    led.add("replica", "dwell", "r0/idle", 0.5)
+    assert led.total() == 2.0
+    assert led.total("kernel") == 1.5
+    d = led.to_dict()
+    assert d["total_j"] == 2.0
+    assert d["by_layer"] == {"kernel": 1.5, "replica": 0.5}
+    assert d["entries"][0]["segment"] == "decode@4"
+
+
+# ---------------------------------------------------------------------------
+# trace_view CLI
+# ---------------------------------------------------------------------------
+
+def test_trace_view_waste_report(traced_faulted_run, tmp_path, capsys):
+    import tools.trace_view as tv
+    _, _, tr = traced_faulted_run
+    path = tr.save(str(tmp_path / "run.trace.json"))
+    assert tv.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "events" in out
+    assert tv.main([path, "--waste"]) == 0
+    out = capsys.readouterr().out
+    assert "per-segment waste" in out
+    assert "stranded-energy kernels" in out
+    assert "TOTAL" in out
+
+
+def test_trace_view_rejects_invalid(tmp_path, capsys):
+    import tools.trace_view as tv
+    bad = tmp_path / "bad.trace.json"
+    bad.write_text(json.dumps({"obs_schema_version": 99, "events": []}))
+    assert tv.main([str(bad)]) == 1
+    assert "INVALID" in capsys.readouterr().err

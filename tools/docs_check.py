@@ -23,6 +23,9 @@ Checks all ``docs/*.md`` files:
   as :class:`repro.dvfs.DvfsPlan` documents against the IR schema
   (``repro.dvfs.validate_plan_dict``), so the plan examples embedded in
   the docs cannot drift from the wire format the loaders accept;
+* fenced ``json`` blocks that carry an ``obs_schema_version`` key —
+  validated as telemetry trace documents against the observability
+  schema (``repro.obs.validate_trace_dict``), same contract as plans;
 * claim-test coverage — every ``@pytest.mark.slow`` test named
   ``test_claim_*`` in ``tests/`` must declare the claim it asserts
   (``Claim N`` in its docstring), and row ``N`` must exist in the
@@ -60,6 +63,12 @@ def _plan_validator():
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.dvfs import validate_plan_dict
     return validate_plan_dict
+
+
+def _trace_validator():
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.obs import validate_trace_dict
+    return validate_trace_dict
 
 
 def _make_targets():
@@ -238,8 +247,9 @@ def main() -> int:
     registry = _registry()
     make_targets = _make_targets()
     validate_plan = _plan_validator()
+    validate_trace = _trace_validator()
     errors = []
-    n_cmds = n_refs = n_plans = 0
+    n_cmds = n_refs = n_plans = n_traces = 0
     for doc in docs:
         rel = os.path.relpath(doc, ROOT)
         with open(doc) as f:
@@ -256,7 +266,12 @@ def main() -> int:
                 errors.append(f"{rel}:{lineno}: unparseable json fence: "
                               f"{e}")
                 continue
-            if isinstance(obj, dict) and "schema_version" in obj:
+            if isinstance(obj, dict) and "obs_schema_version" in obj:
+                n_traces += 1
+                for problem in validate_trace(obj):
+                    errors.append(f"{rel}:{lineno}: embedded trace "
+                                  f"invalid: {problem}")
+            elif isinstance(obj, dict) and "schema_version" in obj:
                 n_plans += 1
                 for problem in validate_plan(obj):
                     errors.append(f"{rel}:{lineno}: embedded DvfsPlan "
@@ -310,6 +325,7 @@ def main() -> int:
         return 1
     print(f"docs-check OK: {len(docs)} docs, {n_cmds} commands, "
           f"{n_refs} artifact refs, {n_plans} embedded plan(s), "
+          f"{n_traces} embedded trace(s), "
           f"{n_covered} registered benchmarks covered by claims.md, "
           f"{n_smoke} bench-smoke gates registered, "
           f"{n_claim_tests} slow claim gates mapped")

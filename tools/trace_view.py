@@ -1,0 +1,182 @@
+"""Telemetry trace viewer: ``python -m tools.trace_view <trace.json>``.
+
+Loads (and validates) a ``repro.obs`` trace document and prints a
+per-track timeline summary.  With ``--waste`` it becomes the
+waste-attribution report the paper's kernel-level claim rests on: every
+executed plan segment's *measured* time/energy (what the meters billed,
+prefix-cache ``frac`` scaling included) is diffed against its *planned*
+cost, then the per-kernel planned-vs-auto breakdowns the executor
+stashed at mount time (``meta["segments"]``) are joined against the
+execution weights to rank the kernels by **stranded energy** — the
+joules the auto governor would burn over the plan's clocks, i.e. the
+compute waste kernel-level DVFS recovers that a pass-level plan leaves
+on the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+
+def _fmt_si(v: float, unit: str) -> str:
+    for scale, pre in ((1.0, ""), (1e-3, "m"), (1e-6, "u"), (1e-9, "n")):
+        if abs(v) >= scale:
+            return f"{v / scale:.3g} {pre}{unit}"
+    return f"{v:.3g} {unit}"
+
+
+def summarize(doc: Dict) -> List[str]:
+    """Per-track timeline summary lines."""
+    tracks: Dict[str, Dict] = defaultdict(
+        lambda: {"spans": 0, "span_s": 0.0, "instants": defaultdict(int),
+                 "counters": 0, "t_max": 0.0})
+    for ev in doc.get("events", []):
+        tr = tracks[ev["track"]]
+        end = ev["ts"] + ev.get("dur", 0.0)
+        tr["t_max"] = max(tr["t_max"], end)
+        if ev["kind"] in ("span", "aspan"):
+            tr["spans"] += 1
+            tr["span_s"] += ev.get("dur", 0.0)
+        elif ev["kind"] == "counter":
+            tr["counters"] += 1
+        else:
+            tr["instants"][ev["cat"]] += 1
+    lines = []
+    for name in sorted(tracks):
+        tr = tracks[name]
+        inst = " ".join(f"{c}:{n}" for c, n in
+                        sorted(tr["instants"].items()))
+        lines.append(
+            f"  {name:16s} {tr['spans']:5d} spans "
+            f"({tr['span_s']:.4f}s busy), {tr['counters']} counters, "
+            f"span+instant horizon {tr['t_max']:.4f}s"
+            + (f"  [{inst}]" if inst else ""))
+    return lines
+
+
+def waste_report(doc: Dict, top: int = 10) -> List[str]:
+    """Planned-vs-measured diff per executed plan segment, then the
+    stranded-energy kernel ranking."""
+    # group executed phase spans by (track, segment)
+    groups: Dict[tuple, Dict] = {}
+    weights: Dict[str, float] = defaultdict(float)  # segment-key -> Σfrac
+    for ev in doc.get("events", []):
+        if ev["kind"] != "span" or ev.get("cat") != "phase":
+            continue
+        args = ev.get("args") or {}
+        if "planned_time_s" not in args:
+            continue                      # engine decode-round etc.
+        frac = float(args.get("frac", 1.0))
+        g = groups.setdefault((ev["track"], ev["name"]), {
+            "n": 0, "weight": 0.0, "t_plan": 0.0, "e_plan": 0.0,
+            "t_meas": 0.0, "e_meas": 0.0})
+        g["n"] += 1
+        g["weight"] += frac
+        g["t_plan"] += float(args["planned_time_s"]) * frac
+        g["e_plan"] += float(args.get("planned_energy_j", 0.0)) * frac
+        g["t_meas"] += float(ev.get("dur", 0.0))
+        g["e_meas"] += float(args.get("energy_j", 0.0))
+        key = f"{ev['track']}|{ev['name']}|r{args.get('rev', 1)}"
+        weights[key] += frac
+    lines = ["per-segment waste (measured - planned):",
+             f"  {'track/segment':28s} {'execs':>6s} {'weight':>8s} "
+             f"{'t_meas':>10s} {'dt':>10s} {'e_meas':>10s} {'de':>10s}"]
+    tot = {"t_plan": 0.0, "e_plan": 0.0, "t_meas": 0.0, "e_meas": 0.0}
+    for (track, name), g in sorted(groups.items()):
+        dt, de = g["t_meas"] - g["t_plan"], g["e_meas"] - g["e_plan"]
+        lines.append(
+            f"  {track + '/' + name:28s} {g['n']:6d} {g['weight']:8.2f} "
+            f"{g['t_meas']:10.4f} {dt:+10.2e} "
+            f"{g['e_meas']:10.3f} {de:+10.2e}")
+        for k in tot:
+            tot[k] += g[k]
+    lines.append(
+        f"  {'TOTAL':28s} {sum(g['n'] for g in groups.values()):6d} "
+        f"{sum(g['weight'] for g in groups.values()):8.2f} "
+        f"{tot['t_meas']:10.4f} {tot['t_meas'] - tot['t_plan']:+10.2e} "
+        f"{tot['e_meas']:10.3f} {tot['e_meas'] - tot['e_plan']:+10.2e}")
+
+    # join mount-time kernel breakdowns against execution weights:
+    # stranded_j = (auto-clock energy - planned-clock energy) * Σfrac
+    segments = (doc.get("meta") or {}).get("segments") or {}
+    kernels: Dict[tuple, Dict] = {}
+    for key, w in weights.items():
+        br = segments.get(key)
+        if not br:
+            continue
+        for kname, row in (br.get("kernels") or {}).items():
+            k = kernels.setdefault((key.split("|")[1], kname), {
+                "stranded_j": 0.0, "e_plan": 0.0, "dt": 0.0, "n": 0})
+            k["stranded_j"] += (row["e_auto"] - row["e_plan"]) * w
+            k["e_plan"] += row["e_plan"] * w
+            k["dt"] += (row["t_plan"] - row["t_auto"]) * w
+            k["n"] += int(row.get("n", 1) * w)
+    if kernels:
+        ranked = sorted(kernels.items(),
+                        key=lambda kv: -kv[1]["stranded_j"])[:top]
+        total_stranded = sum(k["stranded_j"] for k in kernels.values())
+        lines.append("")
+        lines.append(f"top stranded-energy kernels (auto - planned "
+                     f"clocks, weighted by executions; "
+                     f"total {total_stranded:+.3f} J):")
+        lines.append(f"  {'segment':14s} {'kernel':26s} "
+                     f"{'stranded':>12s} {'planned':>10s} {'slowdown':>10s}")
+        for (seg, kname), k in ranked:
+            lines.append(
+                f"  {seg:14s} {kname:26s} "
+                f"{_fmt_si(k['stranded_j'], 'J'):>12s} "
+                f"{_fmt_si(k['e_plan'], 'J'):>10s} "
+                f"{_fmt_si(k['dt'], 's'):>10s}")
+    else:
+        lines.append("")
+        lines.append("no mount-time kernel breakdowns in meta.segments "
+                     "(trace recorded without an executor tracer?)")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.trace_view",
+        description="validate + summarize a repro.obs telemetry trace")
+    ap.add_argument("trace", help="path to a *.trace.json document")
+    ap.add_argument("--waste", action="store_true",
+                    help="print the per-segment planned-vs-measured "
+                         "waste attribution + stranded-kernel ranking")
+    ap.add_argument("--top", type=int, default=10,
+                    help="stranded-kernel rows to show (default 10)")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the validated document back as JSON")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, "src")           # repo-root invocation
+    from repro.obs import validate_trace_dict
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errs = validate_trace_dict(doc)
+    if errs:
+        for e in errs:
+            print(f"INVALID: {e}", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps(doc, indent=1, sort_keys=True, default=float))
+        return 0
+    meta = doc.get("meta") or {}
+    head = {k: v for k, v in meta.items() if k != "segments"}
+    print(f"trace {args.trace}: {len(doc.get('events', []))} events, "
+          f"{len(doc.get('traceEvents', []))} chrome events"
+          + (f", meta={head}" if head else ""))
+    for line in summarize(doc):
+        print(line)
+    if args.waste:
+        print()
+        for line in waste_report(doc, top=args.top):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
